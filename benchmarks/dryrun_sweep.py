@@ -1,0 +1,103 @@
+"""Baseline dry-run sweep driver: every live (arch × shape) cell on the
+single-pod (16×16) and multi-pod (2×16×16) meshes.
+
+Each cell runs in its own subprocess (dryrun.py must own jax init to force
+512 host devices). Train cells run with layer remat + 8 microbatches (the
+production memory configuration at 1M-token global batch). If a cell's
+peak-per-device estimate exceeds v5e HBM (16 GiB), it is re-run with the
+FSDP rule set (params+optimizer sharded over the data axis, ZeRO-3 style)
+and recorded as such — that *is* the deployable baseline for those cells.
+
+Usage:  PYTHONPATH=src python -m benchmarks.dryrun_sweep [--mesh single|multi|both]
+Results: benchmarks/results/dryrun/{arch}.{shape}.{mesh}.json (+ sweep.log)
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+HBM = 16 * 2 ** 30
+FSDP_RULES = '{"embed": "data", "expert_mlp": "data", "lora": "data"}'
+OUT_DIR = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def run_one(arch: str, shape: str, mesh: str, kind: str, log) -> dict:
+    out = os.path.join(OUT_DIR, f"{arch}.{shape}.{mesh}.json")
+    if os.path.exists(out):
+        rec = json.load(open(out))
+        log(f"SKIP {arch} {shape} {mesh} (cached)")
+        return rec
+    base = [sys.executable, "-m", "repro.launch.dryrun", "--arch", arch,
+            "--shape", shape, "--mesh", mesh, "--out", out]
+    if kind == "train":
+        base += ["--remat", "--microbatches", "8"]
+
+    def attempt(extra, tag):
+        t0 = time.time()
+        r = subprocess.run(base + extra, capture_output=True, text=True,
+                           timeout=1800)
+        dt = time.time() - t0
+        if r.returncode != 0:
+            log(f"FAIL {arch} {shape} {mesh} {tag} ({dt:.0f}s): "
+                f"{r.stderr.strip().splitlines()[-1][:300] if r.stderr else '?'}")
+            return None
+        rec = json.load(open(out))
+        peak = rec["memory"]["peak_bytes_estimate"]
+        log(f"OK   {arch} {shape} {mesh} {tag} ({dt:.0f}s) "
+            f"peak={peak/2**30:.2f}GiB bottleneck="
+            f"{rec['roofline']['bottleneck']} "
+            f"frac={rec['roofline']['roofline_fraction']:.4f}")
+        return rec
+
+    rec = attempt([], "base")
+    if rec and rec["memory"]["peak_bytes_estimate"] > HBM:
+        os.rename(out, out + ".nofsdp")
+        rec2 = attempt(["--rules", FSDP_RULES], "fsdp")
+        if rec2 is not None:
+            rec2["fsdp"] = True
+            json.dump(rec2, open(out, "w"), indent=1)
+            return rec2
+        os.rename(out + ".nofsdp", out)
+    return rec
+
+
+def main():
+    sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+    from repro.configs import SHAPES, cells
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--only", default=None, help="substring filter arch")
+    args = ap.parse_args()
+    os.makedirs(OUT_DIR, exist_ok=True)
+    logf = open(os.path.join(OUT_DIR, "sweep.log"), "a")
+
+    def log(msg):
+        line = f"[{time.strftime('%H:%M:%S')}] {msg}"
+        print(line, flush=True)
+        logf.write(line + "\n")
+        logf.flush()
+
+    live, skipped = cells()
+    for a, s in skipped:
+        log(f"SKIPCELL {a} {s} (long_500k: full attention)")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    for mesh in meshes:
+        for a, s in live:
+            if args.only and args.only not in a:
+                continue
+            try:
+                run_one(a, s, mesh, SHAPES[s].kind, log)
+            except subprocess.TimeoutExpired:
+                log(f"TIMEOUT {a} {s} {mesh}")
+            except Exception as e:  # noqa: BLE001 — keep sweeping
+                log(f"ERROR {a} {s} {mesh}: {e}")
+    log("sweep complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+"""§Perf hillclimb driver: run named variants of the three selected cells
+and record (hypothesis → change → before/after) evidence.
+
+Cells (selection per the assignment):
+  A. zamba2-7b × train_4k      — most collective-bound baseline
+  B. musicgen-medium × train_4k — worst train roofline fraction
+  C. qwen2-7b × decode_32k     — most representative of the paper
+                                  (low-bit dense-LM decode GeMVs)
+
+Each variant is one `repro.launch.dryrun` invocation (fresh process) with
+knob overrides; JSON lands in benchmarks/results/perf/.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb [--only A|B|C]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import subprocess
+import sys
+import time
+
+OUT = os.path.join(os.path.dirname(__file__), "results", "perf")
+
+# variant = (cell_tag, name, dryrun args)
+VARIANTS = [
+    # ---- cell A: zamba2-7b train_4k (collective-bound) ----------------------
+    ("A", "baseline", ["--arch", "zamba2-7b", "--shape", "train_4k",
+                       "--remat", "--microbatches", "8"]),
+    ("A", "seqpar", ["--arch", "zamba2-7b", "--shape", "train_4k",
+                     "--remat", "--microbatches", "8",
+                     "--rules", '{"seq": "model"}']),
+    ("A", "mb4", ["--arch", "zamba2-7b", "--shape", "train_4k",
+                  "--remat", "--microbatches", "4"]),
+    ("A", "seqpar_mb4", ["--arch", "zamba2-7b", "--shape", "train_4k",
+                         "--remat", "--microbatches", "4",
+                         "--rules", '{"seq": "model"}']),
+    ("A", "fsdp_seqpar", ["--arch", "zamba2-7b", "--shape", "train_4k",
+                          "--remat", "--microbatches", "8",
+                          "--rules",
+                          '{"seq": "model", "embed": "data"}']),
+    ("A", "fsdp_seqpar_mb4", ["--arch", "zamba2-7b", "--shape", "train_4k",
+                              "--remat", "--microbatches", "4",
+                              "--rules",
+                              '{"seq": "model", "embed": "data"}']),
+    # ---- cell B: musicgen-medium train_4k (worst train fraction) ------------
+    ("B", "baseline", ["--arch", "musicgen-medium", "--shape", "train_4k",
+                       "--remat", "--microbatches", "8"]),
+    ("B", "mb2", ["--arch", "musicgen-medium", "--shape", "train_4k",
+                  "--remat", "--microbatches", "2"]),
+    ("B", "mb2_norem", ["--arch", "musicgen-medium", "--shape", "train_4k",
+                        "--microbatches", "2"]),
+    ("B", "seqpar_mb2", ["--arch", "musicgen-medium", "--shape", "train_4k",
+                         "--remat", "--microbatches", "2",
+                         "--rules", '{"seq": "model"}']),
+    ("B", "seqpar_mb2_bf16flash", ["--arch", "musicgen-medium", "--shape",
+                                   "train_4k", "--remat", "--microbatches",
+                                   "2", "--flash-bf16",
+                                   "--rules", '{"seq": "model"}']),
+    ("B", "seqpar_mb2_bf16flash_blk2k", ["--arch", "musicgen-medium",
+                                         "--shape", "train_4k", "--remat",
+                                         "--microbatches", "2",
+                                         "--flash-bf16", "--flash-block",
+                                         "2048",
+                                         "--rules", '{"seq": "model"}']),
+    # ---- cell C: qwen2-7b decode_32k (paper-representative) -----------------
+    ("C", "kv_replicated", ["--arch", "qwen2-7b", "--shape", "decode_32k",
+                            "--rules", '{"kv_seq": null}']),
+    ("C", "baseline", ["--arch", "qwen2-7b", "--shape", "decode_32k"]),
+    ("C", "kv_int8", ["--arch", "qwen2-7b", "--shape", "decode_32k",
+                      "--kv-bits", "8"]),
+    ("C", "bitplane_q4", ["--arch", "qwen2-7b", "--shape", "decode_32k",
+                          "--quant-bits", "4"]),
+    ("C", "bitplane_q4_kv8", ["--arch", "qwen2-7b", "--shape", "decode_32k",
+                              "--quant-bits", "4", "--kv-bits", "8"]),
+]
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    os.makedirs(OUT, exist_ok=True)
+    for cell, name, extra in VARIANTS:
+        if args.only and args.only != cell:
+            continue
+        out = os.path.join(OUT, f"{cell}.{name}.json")
+        if os.path.exists(out):
+            print(f"SKIP {cell}.{name} (cached)")
+            continue
+        cmd = [sys.executable, "-m", "repro.launch.dryrun", "--mesh",
+               "single", "--out", out] + extra
+        t0 = time.time()
+        r = subprocess.run(cmd, capture_output=True, text=True, timeout=1800)
+        if r.returncode:
+            print(f"FAIL {cell}.{name}: "
+                  f"{r.stderr.strip().splitlines()[-1][:240]}")
+            continue
+        rec = json.load(open(out))
+        rf, m = rec["roofline"], rec["memory"]
+        print(f"OK {cell}.{name} ({time.time()-t0:.0f}s) "
+              f"bound={rf['bound_s']:.4g}s ({rf['bottleneck']}) "
+              f"mem={rf['memory_s']:.4g} coll={rf['collective_s']:.4g} "
+              f"comp={rf['compute_s']:.4g} frac={rf['roofline_fraction']:.4f}"
+              f" peak={m['peak_bytes_estimate']/2**30:.2f}GiB")
+
+
+if __name__ == "__main__":
+    main()

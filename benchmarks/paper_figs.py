@@ -1,0 +1,152 @@
+"""One benchmark per paper table/figure (Figs. 3, 12–17 + Table I effects).
+
+The PUD side is the calibrated command-level model (core/pud/timing.py; the
+container has no DDR4+FPGA testbed — see DESIGN.md §2); the CPU/GPU sides
+are the analytic baselines calibrated to Table II / Fig. 12 anchors. Every
+row prints model output next to the paper's claim where one exists.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.pud.gemv import (PudGeometry, conventional_pud_cost,
+                                 mvdram_gemv_cost, usable_output_slots)
+from repro.core.pud.layout import horizontal_capacity_report
+from repro.core.pud.timing import (CpuBaseline, DDR4_2400, GpuBaseline,
+                                   compare_gemv, price_gemv)
+
+GEOM = PudGeometry()
+
+
+def fig3_latency_profile(emit):
+    """Fig. 3: 32768×8192 4-bit GeMV — where the time goes, conventional PUD
+    vs MVDRAM (pre-arrange / compute / aggregate+transpose)."""
+    m, n, q, p = 32768, 8192, 4, 4
+    mv = price_gemv(mvdram_gemv_cost(m, n, q, p), GEOM)
+    conv = price_gemv(conventional_pud_cost(m, n, q, p), GEOM)
+    cpu = CpuBaseline().gemv_time(m, n, q, p)
+    emit("fig3.conventional.prearrange_ms", conv.t_prearrange * 1e3)
+    emit("fig3.conventional.compute_ms", conv.t_compute * 1e3)
+    emit("fig3.conventional.aggregate_ms", conv.t_aggregate * 1e3)
+    emit("fig3.conventional.total_ms", conv.t_total * 1e3)
+    emit("fig3.mvdram.prearrange_ms", mv.t_prearrange * 1e3,
+         "on-the-fly encoding: 0 by construction")
+    emit("fig3.mvdram.compute_ms", mv.t_compute * 1e3)
+    emit("fig3.mvdram.aggregate_ms", mv.t_aggregate * 1e3,
+         "no bit-transposition (horizontal layout)")
+    emit("fig3.mvdram.total_ms", mv.t_total * 1e3)
+    emit("fig3.cpu.total_ms", cpu * 1e3)
+
+
+def fig12_gemv_bitwidth(emit):
+    """Fig. 12: 32000×4096 GeMV latency across weight bit-widths."""
+    r = compare_gemv(32000, 4096, q=2, p=1)
+    emit("fig12.q2_p1.mvdram_ms", r["mvdram_ms"], "paper: 0.19")
+    emit("fig12.q2_p1.cpu_ms", r["cpu_ms"], "paper: 1.44")
+    emit("fig12.q2_p1.gpu_ms", r["gpu_ms"], "paper: 1.70")
+    emit("fig12.q2_p1.speedup_cpu", r["speedup_vs_cpu"], "paper: 7.29x")
+    for q in (2, 3, 4, 8):
+        rr = compare_gemv(32000, 4096, q=q, p=4)
+        emit(f"fig12.q{q}_p4.mvdram_ms", rr["mvdram_ms"])
+        emit(f"fig12.q{q}_p4.speedup_cpu", rr["speedup_vs_cpu"])
+
+
+def fig13_gemv_size(emit):
+    """Fig. 13: square GeMV latency across sizes at 2-bit weights."""
+    for sz in (2048, 4096, 8192, 16384, 32768):
+        r = compare_gemv(sz, sz, q=2, p=4)
+        note = "paper: 3.38x cpu / 3.74x gpu" if sz == 32768 else ""
+        emit(f"fig13.{sz}.mvdram_ms", r["mvdram_ms"])
+        emit(f"fig13.{sz}.speedup_cpu", r["speedup_vs_cpu"], note)
+
+
+def fig14_energy(emit):
+    """Fig. 14: 32000×4096 GeMV energy, 2-bit matrix, vector width sweep."""
+    for p, note in [(1, "paper: 30.5x cpu / 8.87x gpu"), (2, ""), (4, ""),
+                    (8, "")]:
+        r = compare_gemv(32000, 4096, q=2, p=p)
+        emit(f"fig14.p{p}.mvdram_mj", r["mvdram_mj"])
+        emit(f"fig14.p{p}.energy_ratio_cpu", r["energy_ratio_vs_cpu"], note)
+        emit(f"fig14.p{p}.energy_ratio_gpu", r["energy_ratio_vs_gpu"])
+
+
+def fig15_capacity(emit):
+    """Fig. 15: subarray row-utilization breakdown for 4-bit GeMV."""
+    for n_sub in (32, 64, 128):
+        rep = horizontal_capacity_report(n_sub=n_sub, q=4, p=4)
+        emit(f"fig15.n{n_sub}.matrix_rows", rep["matrix_rows"]
+             + rep["inverted_matrix_rows"])
+        emit(f"fig15.n{n_sub}.compute_output_rows",
+             rep["computation_rows"] + rep["output_rows"])
+        emit(f"fig15.n{n_sub}.overhead_fraction", rep["overhead_fraction"],
+             "paper: minimal vs matrix storage")
+
+
+def table1_reliable_columns(emit):
+    """Table I: usable output slots under measured reliable-column counts."""
+    rng = np.random.default_rng(0)
+    for name, reliable in [("module1", 61727), ("module3", 54365)]:
+        mask = np.ones(65536, bool)
+        bad = rng.choice(65536, 65536 - reliable, replace=False)
+        mask[bad] = False
+        for q in (2, 4):
+            slots = usable_output_slots(mask, q)
+            emit(f"table1.{name}.q{q}.outputs_per_subarray", len(slots),
+                 f"{reliable}/65536 reliable columns")
+
+
+# -- end-to-end token throughput/energy (Figs. 16/17) -------------------------
+
+E2E_MODELS = {
+    # name: (layers, d_model, n_heads, d_ff, vocab)
+    "llama2-7b": (32, 4096, 32, 11008, 32000),
+    "llama2-13b": (40, 5120, 40, 13824, 32000),
+    "llama3-8b": (32, 4096, 32, 14336, 128256),
+    "phi-4": (40, 5120, 40, 17920, 100352),
+}
+T_OTHER = 9.0e-3   # s/token of non-GeMV work (attention·KV, norms, sampling)
+HOST_W = 12.0      # host package watts during the non-GeMV phase
+HOST_IDLE_W = 30.0  # host idles (but stays powered) while DRAM computes —
+#                     excluded from the isolated-GeMV Fig. 14 numbers, real
+#                     in the end-to-end pipeline
+
+# The paper does not state the ACTIVATION precision of its llama.cpp
+# integration. Our calibrated model brackets the claimed end-to-end ratios
+# between p=1 (sign-bit activations; ratio above paper) and p=2 (below);
+# microbenchmark anchors (Figs. 3/12/13/14) all match within tolerance —
+# recorded in EXPERIMENTS.md §Paper-claims.
+E2E_ACT_BITS = (1, 2)
+
+
+def _gemv_list(model):
+    layers, d, h, ff, vocab = E2E_MODELS[model]
+    # fused qkv / fused gate+up (same reduction dim ⇒ same command stream)
+    return ([(3 * d, d), (d, d), (2 * ff, d), (d, ff)] * layers
+            + [(vocab, d)])
+
+
+def fig16_17_e2e(emit):
+    cpu = CpuBaseline()
+    for model in E2E_MODELS:
+        for q, note_t, note_e in [
+                (2, "paper 13b: 2.18x", "paper 13b: 3.04x"),
+                (4, "paper 13b: 1.31x", "paper 13b: 2.35x")]:
+            t_cpu = sum(cpu.gemv_time(m, n, q, 8)
+                        for m, n in _gemv_list(model)) + T_OTHER
+            emit(f"fig16.{model}.q{q}.cpu_tok_s", 1.0 / t_cpu)
+            for p in E2E_ACT_BITS:
+                costs = [price_gemv(mvdram_gemv_cost(m, n, q, p), GEOM)
+                         for m, n in _gemv_list(model)]
+                t_mv = sum(c.t_total for c in costs) + T_OTHER
+                e_mv = (sum(c.e_total for c in costs) + T_OTHER * HOST_W
+                        + HOST_IDLE_W * (t_mv - T_OTHER))
+                e_cpu = t_cpu * cpu.power
+                emit(f"fig16.{model}.q{q}.p{p}.mvdram_tok_s", 1.0 / t_mv)
+                emit(f"fig16.{model}.q{q}.p{p}.throughput_ratio",
+                     t_cpu / t_mv, note_t if "13b" in model else "")
+                emit(f"fig17.{model}.q{q}.p{p}.energy_ratio", e_cpu / e_mv,
+                     note_e if "13b" in model else "")
+
+
+ALL = [fig3_latency_profile, fig12_gemv_bitwidth, fig13_gemv_size,
+       fig14_energy, fig15_capacity, table1_reliable_columns, fig16_17_e2e]

@@ -1,0 +1,54 @@
+"""§Roofline: aggregate the dry-run JSON records into the per-(arch × shape
+× mesh) table (markdown + CSV emission)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def load_records():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        try:
+            recs.append(json.load(open(f)))
+        except Exception:
+            pass
+    return recs
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    rows = ["| arch | shape | peak GiB | compute s | memory s | collective s"
+            " | bottleneck | MFLOPs ratio | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in load_records():
+        if r["mesh"] != mesh:
+            continue
+        rf = r["roofline"]
+        rows.append(
+            f"| {r['arch']} | {r['shape']}{' (fsdp)' if r.get('fsdp') else ''}"
+            f" | {r['memory']['peak_bytes_estimate']/2**30:.2f}"
+            f" | {rf['compute_s']:.3g} | {rf['memory_s']:.3g}"
+            f" | {rf['collective_s']:.3g} | {rf['bottleneck']}"
+            f" | {rf['useful_flops_ratio']:.3f}"
+            f" | {rf['roofline_fraction']:.4f} |")
+    return "\n".join(rows)
+
+
+def roofline_rows(emit):
+    for r in load_records():
+        rf = r["roofline"]
+        key = f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}"
+        emit(f"{key}.bound_s", rf["bound_s"],
+             f"bottleneck={rf['bottleneck']}")
+        emit(f"{key}.fraction", rf["roofline_fraction"])
+
+
+ALL = [roofline_rows]
+
+if __name__ == "__main__":
+    print(markdown_table("16x16"))
+    print()
+    print(markdown_table("2x16x16"))

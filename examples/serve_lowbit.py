@@ -1,0 +1,66 @@
+"""Low-bit serving through the MVDRAM bit-plane engine — the paper's
+deployment story on the TPU adaptation:
+
+* weights of every GeMV-shaped projection are packed to q-bit bit-planes
+  (HBM footprint ≈ q/16 of bf16 — printed below),
+* decode-time GeMVs run through kernels/bitplane_gemv,
+* outputs match the dense model (8-bit) / stay close (4-bit).
+
+Also drives an embeddings-frontend arch (musicgen stub) to show the
+frontend-stubbed serving path.
+
+    PYTHONPATH=src python examples/serve_lowbit.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import tiny_config
+from repro.models.model import Model, param_defs
+from repro.models.params import init_params
+from repro.serve.engine import ServeEngine
+from repro.serve.quantize import quantize_params, serving_bytes
+
+key = jax.random.PRNGKey(0)
+
+cfg = dataclasses.replace(tiny_config("llama2-7b"), dtype="float32")
+params = init_params(param_defs(cfg), key)
+prompts = jax.random.randint(key, (2, 12), 0, cfg.vocab_size,
+                             dtype=jnp.int32)
+
+print("=== HBM footprint of the serving formats (full llama2-7b) ===")
+from repro.configs import get_config
+full_defs = param_defs(get_config("llama2-7b"))
+for bits in (2, 4, 8):
+    rep = serving_bytes(full_defs, bits)
+    print(f"  {bits}-bit planes: {rep['bitplane']/2**30:6.2f} GiB  "
+          f"(bf16 dense {rep['dense_bf16']/2**30:.2f} GiB → "
+          f"{rep['ratio']:.2f}x smaller)")
+
+print("\n=== greedy decode agreement vs dense (tiny model) ===")
+dense = ServeEngine(cfg, params, max_seq=40, quantized=False)
+ref = dense.generate(prompts, max_new=12)
+for bits in (8, 4, 2):
+    cfg_b = dataclasses.replace(cfg, weight_bits=bits)
+    quant = ServeEngine(cfg_b, params, max_seq=40, quantized=True)
+    out = quant.generate(prompts, max_new=12)
+    agree = float((out == ref).mean())
+    print(f"  {bits}-bit bit-plane serving: {agree*100:5.1f}% token "
+          f"agreement with dense")
+
+print("\n=== stubbed-frontend (musicgen) decode over frame embeddings ===")
+mcfg = tiny_config("musicgen-medium")
+mparams = init_params(param_defs(mcfg), key)
+model = Model(mcfg)
+cache = model.init_cache(1, 16)
+step = jax.jit(model.decode_step)
+frame = jax.random.normal(key, (1, mcfg.d_model), jnp.float32)
+codes = []
+for t in range(8):
+    logits, cache = step(mparams, cache, frame, jnp.int32(t))
+    codes.append(int(jnp.argmax(logits[0])))
+    frame = jax.random.fold_in(key, t) * 0  # next frame stub
+    frame = jax.random.normal(jax.random.fold_in(key, t),
+                              (1, mcfg.d_model), jnp.float32)
+print("  EnCodec code stream:", codes)

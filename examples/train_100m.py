@@ -1,0 +1,66 @@
+"""End-to-end driver: train a ~100M-parameter llama-family model for a few
+hundred steps on the synthetic LM stream, with checkpoints, then reload and
+serve a few tokens from it.
+
+    PYTHONPATH=src python examples/train_100m.py [--steps 300]
+
+(~100M params is the largest model that trains in reasonable wall-clock on
+this CPU container; on TPU the identical code path scales through the mesh
+in launch/train.py.)
+"""
+import argparse
+import dataclasses
+import tempfile
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import AttnConfig, ModelConfig
+from repro.optim.adamw import AdamWConfig
+from repro.serve.engine import ServeEngine
+from repro.train.loop import Trainer, TrainerConfig
+
+
+def config_100m() -> ModelConfig:
+    return ModelConfig(
+        name="llama-100m", family="dense", num_layers=8, d_model=512,
+        d_ff=1536, vocab_size=2048,
+        attn=AttnConfig(num_heads=8, num_kv_heads=4, head_dim=64),
+        pattern=("attn",), ffn_type="glu", norm_type="rmsnorm",
+        weight_bits=4)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args()
+
+    cfg = config_100m()
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        trainer = Trainer(
+            cfg,
+            AdamWConfig(lr=1e-3, warmup_steps=20, total_steps=args.steps),
+            TrainerConfig(ckpt_dir=ckpt_dir, ckpt_every=100,
+                          num_microbatches=2),
+            global_batch=args.batch, seq_len=args.seq)
+        from repro.models.params import count_params
+        print(f"params: {count_params(trainer.defs)/1e6:.1f}M")
+        params, _, history = trainer.run(args.steps, log_every=25)
+        for h in history:
+            print(f"step {h['step']:4d}  loss {h['loss']:.3f}  "
+                  f"ppl {h['ppl']:8.1f}  {h['sec_per_step']:.2f}s/step")
+        uniform = float(jnp.log(cfg.vocab_size))
+        final = history[-1]["loss"]
+        print(f"\nfinal loss {final:.3f} vs uniform {uniform:.3f} — "
+              f"{'LEARNED' if final < uniform - 1 else 'check hyperparams'}")
+
+        # serve a few tokens from the trained weights (dense bf16)
+        eng = ServeEngine(cfg, params, max_seq=64, batch_slots=2)
+        toks = eng.generate(jnp.zeros((2, 8), jnp.int32), max_new=16)
+        print("sampled continuation:", toks[0, 8:].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Assigned input-shape profiles (same four for every LM-family arch).
+
+train_4k / prefill_32k lower `train_step` / `prefill`; decode_32k and
+long_500k lower `serve_step` (one new token against a seq_len-deep cache).
+long_500k requires sub-quadratic state and only runs for the SSM / hybrid /
+local-attention architectures (see configs.ARCHS[...]["long_ok"]).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeProfile:
+    name: str
+    kind: str          # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeProfile("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeProfile("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeProfile("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeProfile("long_500k", "decode", 524_288, 1),
+}

@@ -1,0 +1,169 @@
+"""Bit-plane decomposition algebra — the mathematical core of MVDRAM.
+
+Horizontal matrix layout (paper §VI): a q-bit unsigned weight matrix
+W_u (N×M) is decomposed into q binary planes W^(i) with
+    W_u = Σ_i 2^i · W^(i).
+A GeMV against the (integer) activation vector a_u factors as
+    a_u · W_u = Σ_i 2^i · (a_u · W^(i))          (matrix-bit decomposition)
+and, with activations ALSO bit-decomposed (on-the-fly vector encoding,
+paper §V: each activation bit selects whether the plane row contributes),
+    a_u · W_u = Σ_i Σ_k 2^{i+k} · (a^(k) · W^(i))  (AND + popcount-accumulate)
+
+Planes are stored PACKED: 32 plane bits along the reduction dim per uint32
+word — this is the TPU analogue of the paper's storage win (q bits/element in
+DRAM instead of 16).
+
+Everything here is pure jnp and serves as the oracle for the Pallas kernel
+(`kernels/bitplane_gemv/ref.py` re-exports these) and for the PUD simulator.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .quant import QuantSpec, QuantizedTensor, quantize_weights
+
+
+@dataclasses.dataclass
+class BitplaneWeights:
+    """Packed bit-plane representation of a quantized (N, M) weight matrix.
+
+    planes:  uint32 (q, N//32, M)  — bit j of word [i, n, m] = W^(i)[n*32+j, m]
+    scale:   f32 (G, M) per-group scales (groups along N)
+    zero:    static int zero point
+    col_sum: int32 (M,) = Σ_j W_u[j, m] for the zero-point correction
+    n:       original reduction length
+    """
+
+    planes: jax.Array
+    scale: jax.Array
+    zero: int
+    col_sum: jax.Array
+    n: int
+    spec: QuantSpec
+
+    @property
+    def bits(self) -> int:
+        return self.planes.shape[0]
+
+    @property
+    def m(self) -> int:
+        return self.planes.shape[-1]
+
+
+jax.tree_util.register_dataclass(
+    BitplaneWeights, data_fields=("planes", "scale", "col_sum"),
+    meta_fields=("zero", "n", "spec"))
+
+
+def decompose_bits(values: jax.Array, bits: int, axis: int = 0) -> jax.Array:
+    """uint codes -> (bits, ...) binary planes along a new leading axis."""
+    shifts = jnp.arange(bits, dtype=jnp.uint32)
+    shape = [bits] + [1] * values.ndim
+    v = values.astype(jnp.uint32)[None]
+    return ((v >> shifts.reshape(shape)) & 1).astype(jnp.uint8)
+
+
+def pack_bitplanes(planes: jax.Array) -> jax.Array:
+    """(q, N, M) binary -> (q, N//32, M) uint32, bit j of a word = row n*32+j."""
+    q, n, m = planes.shape
+    pad = (-n) % 32
+    if pad:
+        planes = jnp.concatenate(
+            [planes, jnp.zeros((q, pad, m), planes.dtype)], axis=1)
+        n += pad
+    p = planes.astype(jnp.uint32).reshape(q, n // 32, 32, m)
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :, None]
+    return jnp.sum(p << shifts, axis=2).astype(jnp.uint32)
+
+
+def unpack_bitplanes(packed: jax.Array, n: int) -> jax.Array:
+    """(q, W, M) uint32 -> (q, n, M) binary uint8."""
+    q, w, m = packed.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, None, :, None]
+    bits = (packed[:, :, None, :] >> shifts) & 1
+    return bits.reshape(q, w * 32, m)[:, :n].astype(jnp.uint8)
+
+
+def make_bitplane_weights(w: jax.Array, spec: QuantSpec) -> BitplaneWeights:
+    """Quantize a dense f32 (N, M) matrix and pack it into bit planes."""
+    qt = quantize_weights(w, spec)
+    planes = decompose_bits(qt.values, spec.bits)  # (q, N, M)
+    packed = pack_bitplanes(planes)
+    return BitplaneWeights(planes=packed, scale=qt.scale, zero=qt.zero,
+                           col_sum=qt.col_sum, n=w.shape[0], spec=spec)
+
+
+def from_quantized(qt: QuantizedTensor) -> BitplaneWeights:
+    planes = decompose_bits(qt.values, qt.spec.bits)
+    return BitplaneWeights(planes=pack_bitplanes(planes), scale=qt.scale,
+                           zero=qt.zero, col_sum=qt.col_sum,
+                           n=qt.values.shape[0], spec=qt.spec)
+
+
+# ---------------------------------------------------------------------------
+# Reference GeMV paths (oracles)
+# ---------------------------------------------------------------------------
+
+def bitplane_gemv_f32(a: jax.Array, bw: BitplaneWeights) -> jax.Array:
+    """f32/bf16 activations × bit-plane weights.
+
+    o = Σ_i 2^i (a · W^(i))  - z_w Σ a     (then per-group scaling)
+    Used when only the weights are quantized (w-bit, a-float — the common
+    serving mode; paper Fig. 12 x-axis "vector bit-width" = 16 column).
+    """
+    planes = unpack_bitplanes(bw.planes, bw.n).astype(jnp.float32)  # (q,N,M)
+    af = a.astype(jnp.float32)
+    g = bw.scale.shape[0]
+    gs = bw.n // g
+    a_g = af.reshape(*af.shape[:-1], g, gs)
+    p_g = planes.reshape(bw.bits, g, gs, bw.m)
+    acc = jnp.einsum("...gn,qgnm->...qgm", a_g, p_g)
+    weights = (2.0 ** jnp.arange(bw.bits, dtype=jnp.float32))
+    acc = jnp.einsum("...qgm,q->...gm", acc, weights)
+    corr = acc - bw.zero * jnp.sum(a_g, axis=-1)[..., None]
+    return jnp.einsum("...gm,gm->...m", corr, bw.scale)
+
+
+def bitplane_gemv_bitserial(aq: QuantizedTensor, bw: BitplaneWeights,
+                            skip_zero_planes: bool = False) -> jax.Array:
+    """Fully bit-decomposed GeMV — both operands as binary planes.
+
+    This is the exact integer computation MVDRAM performs in DRAM:
+    partial products a^(k) AND W^(i) accumulated with weight 2^{i+k}.
+    `skip_zero_planes` mirrors the paper's bit-sparsity optimization (§V-D):
+    activation planes that are entirely zero contribute nothing; in-DRAM this
+    skips command issue, here it's a documentation no-op (result identical).
+    """
+    p = aq.spec.bits
+    a_planes = decompose_bits(aq.values, p).astype(jnp.int32)  # (p, ..., N)
+    w_planes = unpack_bitplanes(bw.planes, bw.n).astype(jnp.int32)  # (q,N,M)
+    acc = jnp.einsum("p...n,qnm->...pqm", a_planes, w_planes)
+    wts = (2 ** (jnp.arange(p)[:, None] + jnp.arange(bw.bits)[None, :]))
+    acc = jnp.einsum("...pqm,pq->...m", acc, wts.astype(jnp.int32))
+    # zero-point corrections (processor side, paper §II-C2)
+    a_u = aq.values.astype(jnp.int32)
+    sum_a = jnp.sum(a_u, axis=-1, keepdims=True)
+    corr = (acc - aq.zero * bw.col_sum - bw.zero * sum_a
+            + bw.n * aq.zero * bw.zero)
+    g = bw.scale.shape[0]
+    if g == 1:
+        out = corr.astype(jnp.float32) * bw.scale[0]
+    else:
+        # bit-serial integer path requires per-partition correction; groups
+        # are realized as separate engine partitions (engine.plan) — the
+        # single-group fast path is exercised here.
+        raise NotImplementedError("bit-serial path is per-partition (g==1)")
+    return out * aq.scale
+
+
+def activation_plane_popcounts(aq: QuantizedTensor) -> jax.Array:
+    """#set bits per activation plane — drives the sparsity skip plan and the
+    command-count model (paper §V-D template selection)."""
+    p = aq.spec.bits
+    planes = decompose_bits(aq.values, p)
+    return jnp.sum(planes.astype(jnp.int32), axis=tuple(range(1, planes.ndim)))

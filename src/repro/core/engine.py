@@ -1,0 +1,179 @@
+"""MVDRAMEngine — the system-level orchestrator (paper §IV).
+
+The engine owns everything the paper's "processor + unmodified DRAM" pair
+does around a GeMV:
+
+  register()   quantize + bit-plane-pack a weight matrix, build the partition
+               plan (N≤128 per subarray, q·M per column budget, channel/bank
+               placement — §VII "Matrix Partitioning"), i.e. step ① of the
+               execution flow (weights pre-loaded into DRAM).
+  gemv()       steps ②–④: encode the activation into the operation schedule,
+               execute, aggregate. Three interchangeable backends:
+                 mode="sim"    — bit-exact PUD command-stream simulation
+                                 (numpy; small shapes; the ground truth)
+                 mode="jnp"    — pure-jnp bit-plane oracle (any shape; the
+                                 reference for the Pallas kernel)
+                 mode="pallas" — the TPU kernel (kernels/bitplane_gemv)
+  price()      DDR4 timing+energy for the planned GeMV and the CPU/GPU
+               baselines (benchmarks read Fig. 12/13/14 from this).
+
+All backends compute the same mathematics and agree to fp tolerance
+(bit-exactly in the integer domain); tests/test_engine.py holds the proofs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bitplane import (BitplaneWeights, bitplane_gemv_bitserial,
+                       bitplane_gemv_f32, make_bitplane_weights)
+from .pud.gemv import (GemvCost, PudGeometry, conventional_pud_cost,
+                       mvdram_gemv, mvdram_gemv_cost)
+from .pud.timing import (DDR4_2400, CpuBaseline, DDR4Model, GpuBaseline,
+                         PudCost, price_gemv)
+from .quant import (QuantSpec, QuantizedTensor, quantize_activations,
+                    quantize_weights)
+
+
+@dataclasses.dataclass(frozen=True)
+class PartitionPlan:
+    """Static placement of one M×N q-bit GeMV onto the DRAM geometry."""
+
+    m: int
+    n: int
+    q: int
+    p: int
+    n_sub: int
+    n_chunks: int
+    m_per_tile: int
+    col_chunks: int
+
+    @property
+    def tiles(self) -> int:
+        return self.n_chunks * self.col_chunks
+
+    def placement(self, geom: PudGeometry):
+        """tile index -> (channel, bank, wave) round-robin placement."""
+        out = []
+        for t in range(self.tiles):
+            ch = t % geom.channels
+            slot = t // geom.channels
+            out.append((ch, slot % geom.banks_per_channel,
+                        slot // geom.banks_per_channel))
+        return out
+
+
+def make_plan(m: int, n: int, q: int, p: int,
+              geom: PudGeometry, usable_cols: Optional[int] = None
+              ) -> PartitionPlan:
+    cols = usable_cols if usable_cols is not None else geom.real_cols
+    n_sub = min(geom.n_sub_max, n)
+    m_per_tile = cols // q
+    return PartitionPlan(m=m, n=n, q=q, p=p, n_sub=n_sub,
+                         n_chunks=math.ceil(n / n_sub),
+                         m_per_tile=m_per_tile,
+                         col_chunks=math.ceil(m / m_per_tile))
+
+
+@dataclasses.dataclass
+class GemvHandle:
+    """A weight matrix registered with the engine (resident "in DRAM")."""
+
+    name: str
+    weights: BitplaneWeights
+    wq: QuantizedTensor
+    plan: PartitionPlan
+    a_spec: Optional[QuantSpec]  # None => float activations (w-bit / a-fp)
+
+
+class MVDRAMEngine:
+    """Processor-DRAM co-designed GeMV engine (TPU-adapted MVDRAM)."""
+
+    def __init__(self, geom: PudGeometry = PudGeometry(),
+                 timing: DDR4Model = DDR4_2400,
+                 cpu: CpuBaseline = CpuBaseline(),
+                 gpu: GpuBaseline = GpuBaseline(),
+                 sparsity: bool = True):
+        self.geom = geom
+        self.timing = timing
+        self.cpu = cpu
+        self.gpu = gpu
+        self.sparsity = sparsity
+        self.handles: dict[str, GemvHandle] = {}
+
+    # -- step ①: weights into "DRAM" -----------------------------------------
+
+    def register(self, name: str, w: jax.Array, w_spec: QuantSpec,
+                 a_spec: Optional[QuantSpec] = None) -> GemvHandle:
+        """Quantize + pack an (N, M) weight matrix; build the partition plan."""
+        wq = quantize_weights(w, w_spec)
+        bw = make_bitplane_weights(w, w_spec)
+        p = a_spec.bits if a_spec is not None else 16
+        plan = make_plan(m=w.shape[1], n=w.shape[0], q=w_spec.bits, p=p,
+                         geom=self.geom)
+        h = GemvHandle(name=name, weights=bw, wq=wq, plan=plan, a_spec=a_spec)
+        self.handles[name] = h
+        return h
+
+    # -- steps ②–④: encode, execute, aggregate -------------------------------
+
+    def gemv(self, handle: GemvHandle | str, a: jax.Array,
+             mode: str = "jnp"):
+        h = self.handles[handle] if isinstance(handle, str) else handle
+        if mode == "jnp":
+            if h.a_spec is None:
+                return bitplane_gemv_f32(a, h.weights)
+            aq = quantize_activations(a, h.a_spec)
+            return bitplane_gemv_bitserial(aq, h.weights)
+        if mode == "pallas":
+            from ..kernels.bitplane_gemv import ops as bp_ops
+            impl = ("pallas" if jax.default_backend() == "tpu"
+                    else "pallas_interpret")
+            if h.a_spec is None:
+                return bp_ops.bitplane_gemv(a, h.weights, impl=impl)
+            return bp_ops.bitplane_gemv_bitserial(a, h.weights, h.a_spec,
+                                                  impl=impl)
+        if mode == "sim":
+            if h.a_spec is None:
+                raise ValueError("PUD simulation needs quantized activations")
+            assert a.ndim == 1, "sim backend is GeMV-only"
+            aq = quantize_activations(a, h.a_spec)
+            out, report = mvdram_gemv(aq, h.wq, sparsity=self.sparsity,
+                                      geom=self.geom)
+            return jnp.asarray(out), report
+        raise ValueError(f"unknown mode {mode!r}")
+
+    # -- pricing (paper-faithful DDR4 numbers) --------------------------------
+
+    def price(self, handle: GemvHandle | str,
+              bit_density: float = 0.5) -> dict:
+        h = self.handles[handle] if isinstance(handle, str) else handle
+        p = h.plan
+        mv_cost = mvdram_gemv_cost(p.m, p.n, p.q, p.p, bit_density,
+                                   self.sparsity, self.geom)
+        conv_cost = conventional_pud_cost(p.m, p.n, p.q, p.p, bit_density,
+                                          self.geom)
+        mv = price_gemv(mv_cost, self.geom, self.timing)
+        conv = price_gemv(conv_cost, self.geom, self.timing)
+        return {
+            "plan": dataclasses.asdict(p),
+            "mvdram": mv.asdict(),
+            "conventional_pud": conv.asdict(),
+            "cpu_s": self.cpu.gemv_time(p.m, p.n, p.q, p.p),
+            "gpu_s": self.gpu.gemv_time(p.m, p.n, p.q, p.p),
+            "cpu_j": self.cpu.gemv_energy(p.m, p.n, p.q, p.p),
+            "gpu_j": self.gpu.gemv_energy(p.m, p.n, p.q, p.p),
+        }
+
+    # -- model-level helper ----------------------------------------------------
+
+    def storage_bytes(self, handle: GemvHandle | str) -> int:
+        """HBM bytes of the packed representation (the capacity win)."""
+        h = self.handles[handle] if isinstance(handle, str) else handle
+        bw = h.weights
+        return int(bw.planes.size * 4 + bw.scale.size * 4 + bw.col_sum.size * 4)

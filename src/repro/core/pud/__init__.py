@@ -1,0 +1,13 @@
+"""Functional + cost model of Processing-Using-DRAM on unmodified DRAM.
+
+`device.py`  — subarray bit-array model with RowCopy / MAJX command streams
+`adder.py`   — dual-track (value+complement) MAJ3/MAJ5 full adders
+`layout.py`  — horizontal (MVDRAM) and vertical (conventional PUD) layouts
+`gemv.py`    — on-the-fly vector encoding → in-DRAM GeMV execution
+`timing.py`  — DDR4-2400 command timing + energy model, CPU/GPU baselines
+"""
+from .device import Subarray, OpCounts
+from .layout import HorizontalLayout, horizontal_capacity_report
+from .gemv import mvdram_gemv, mvdram_gemv_subarray, conventional_pud_cost
+from .timing import (DDR4Model, CpuBaseline, GpuBaseline, PudCost,
+                     TPU_V5E, DDR4_2400)

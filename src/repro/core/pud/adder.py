@@ -1,0 +1,95 @@
+"""Dual-track MAJ-based addition inside a subarray (paper §II-C1, §VII).
+
+Unmodified DRAM has no NOT, so every logical value is kept in two tracks:
+the value row and its complement row (inverted matrix rows are written at
+load time; accumulator/carry rows maintain both tracks throughout).
+
+Full-adder identities used (x0,x1,x2 inputs; s1 carry, s0 sum):
+    s1  = MAJ3(x0, x1, x2)
+    s0  = MAJ5(x0, x1, x2, ~s1, ~s1)
+and the complement track uses the self-duality of majority:
+    ~MAJ(x...) = MAJ(~x...).
+
+MAJX destroys its inputs (all activated rows are overwritten with the
+result), so operands are first RowCopied into scratch rows; the scratch rows
+then hold the result, which is RowCopied to its destination.
+"""
+from __future__ import annotations
+
+from .device import Subarray
+from .layout import HorizontalLayout
+
+
+def _maj3_into(sub: Subarray, lay: HorizontalLayout,
+               srcs: list[int], dst: int) -> None:
+    t = lay.scratch5
+    for k, s in enumerate(srcs):
+        sub.row_copy(s, t[k])
+    sub.majx(t[:3])
+    sub.row_copy(t[0], dst)
+
+
+def _maj5_into(sub: Subarray, lay: HorizontalLayout,
+               srcs: list[int], dst: int) -> None:
+    t = lay.scratch5
+    for k, s in enumerate(srcs):
+        sub.row_copy(s, t[k])
+    sub.majx(t)
+    sub.row_copy(t[0], dst)
+
+
+def add_row_at_offset(sub: Subarray, lay: HorizontalLayout,
+                      x_row: int, x_c_row: int, offset: int,
+                      chain_len: int) -> None:
+    """Accumulator += (row x) << offset, ripple-carry over `chain_len` bits.
+
+    chain_len is STATIC (data-independent): the caller derives it from the
+    maximum value the accumulator can hold after this addition, exactly like
+    MVDRAM's pre-built command templates (§V-C) — the command sequence never
+    depends on in-DRAM data, only on host-known activation bits.
+
+    Per bit position b (acc_b = acc bit, c = incoming carry):
+        carry' = MAJ3(acc_b, c, 0)        = acc_b AND c
+        sum    = MAJ5(acc_b, c, 0, ~carry', ~carry')
+    (a full adder with the third input hardwired 0 — the incoming addend
+    enters as the initial carry, which is what a shifted +x<<k is).
+    """
+    carry, carry_c = lay.carry_rows
+    sub.row_copy(x_row, carry)
+    sub.row_copy(x_c_row, carry_c)
+    top = min(offset + chain_len, lay.r)
+    for b in range(offset, top):
+        acc, acc_c = lay.acc_rows[b], lay.acc_c_rows[b]
+        # New carry (and complement) live in DEDICATED temp rows — they must
+        # survive while scratch5 is reused as MAJ5 operand staging.
+        nc, nc_c = lay.temp_rows
+        t = lay.scratch5
+        # carry' = MAJ3(acc, carry, zero)                       [4 rc + maj3]
+        sub.row_copy(acc, t[0]); sub.row_copy(carry, t[1])
+        sub.row_copy(lay.zero_row, t[2])
+        sub.majx(t[:3]); sub.row_copy(t[0], nc)
+        # ~carry' = MAJ3(acc_c, carry_c, one)  (majority self-duality)
+        sub.row_copy(acc_c, t[0]); sub.row_copy(carry_c, t[1])
+        sub.row_copy(lay.one_row, t[2])
+        sub.majx(t[:3]); sub.row_copy(t[0], nc_c)
+        # sum = MAJ5(acc, carry, zero, ~carry', ~carry')        [6 rc + maj5]
+        sub.row_copy(acc, t[0]); sub.row_copy(carry, t[1])
+        sub.row_copy(lay.zero_row, t[2])
+        sub.row_copy(nc_c, t[3]); sub.row_copy(nc_c, t[4])
+        sub.majx(t)
+        sub.row_copy(t[0], acc)                # acc_b := sum
+        # ~sum = MAJ5(acc_c, carry_c, one, carry', carry')      [6 rc + maj5]
+        sub.row_copy(acc_c, t[0]); sub.row_copy(carry_c, t[1])
+        sub.row_copy(lay.one_row, t[2])
+        sub.row_copy(nc, t[3]); sub.row_copy(nc, t[4])
+        sub.majx(t)
+        sub.row_copy(t[0], acc_c)              # acc_b complement := ~sum
+        # carry ← carry'                                         [2 rc]
+        sub.row_copy(nc, carry)
+        sub.row_copy(nc_c, carry_c)
+
+
+def clear_accumulator(sub: Subarray, lay: HorizontalLayout) -> None:
+    for b in range(lay.r):
+        sub.row_copy(lay.zero_row, lay.acc_rows[b])
+        sub.row_copy(lay.one_row, lay.acc_c_rows[b])

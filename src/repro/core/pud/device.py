@@ -1,0 +1,101 @@
+"""Functional model of a DRAM subarray under PUD command streams.
+
+Unmodified-DRAM PUD exposes exactly two primitives (paper §II-C), both
+realized by timing-violating ACT/PRE sequences:
+
+  RowCopy  — ACT(src) → PRE → ACT(dst) before precharge completes: the bitline
+             still carries src's values, so dst's cells latch them.
+  MAJX     — ACT/PRE/ACT in rapid succession activates X rows simultaneously;
+             the sense amplifiers resolve each bitline to the MAJORITY of the
+             X connected cells, and that value is written back to ALL X rows
+             (inputs are destroyed — callers must copy operands first).
+
+The model is bit-exact and column-parallel (a whole row is one numpy vector),
+and counts every command so the timing/energy model can price a run. Host
+reads/writes of rows are tracked separately — they model the DDR data-bus
+traffic that PUD avoids (or, for output aggregation, requires).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class OpCounts:
+    """Command + data-bus accounting for one PUD execution."""
+
+    row_copy: int = 0
+    maj3: int = 0
+    maj5: int = 0
+    majx_other: int = 0
+    host_bits_written: int = 0   # processor → DRAM (pre-arranging cost)
+    host_bits_read: int = 0      # DRAM → processor (output aggregation)
+    host_int_ops: int = 0        # processor-side aggregation arithmetic
+
+    def merge(self, other: "OpCounts") -> "OpCounts":
+        return OpCounts(*(getattr(self, f.name) + getattr(other, f.name)
+                          for f in dataclasses.fields(OpCounts)))
+
+    def scaled(self, k: int) -> "OpCounts":
+        return OpCounts(*(getattr(self, f.name) * k
+                          for f in dataclasses.fields(OpCounts)))
+
+    @property
+    def pud_ops(self) -> int:
+        return self.row_copy + self.maj3 + self.maj5 + self.majx_other
+
+    def asdict(self):
+        return dataclasses.asdict(self)
+
+
+class Subarray:
+    """One DRAM subarray: `rows` wordlines × `cols` bitlines of single bits."""
+
+    def __init__(self, rows: int = 512, cols: int = 1024,
+                 reliable_cols: np.ndarray | None = None):
+        self.rows = rows
+        self.cols = cols
+        self.data = np.zeros((rows, cols), dtype=np.uint8)
+        self.counts = OpCounts()
+        # Reliability mask (paper Table I): MAJX results are only trusted on
+        # calibrated columns; MVDRAM places operands on reliable columns only.
+        self.reliable = (np.ones(cols, dtype=bool) if reliable_cols is None
+                         else reliable_cols.astype(bool))
+
+    # -- PUD primitives ------------------------------------------------------
+
+    def row_copy(self, src: int, dst: int) -> None:
+        self.data[dst] = self.data[src]
+        self.counts.row_copy += 1
+
+    def majx(self, rows: list[int]) -> None:
+        """Simultaneous activation of len(rows) rows: every bitline resolves to
+        the majority of the connected cells; the result overwrites ALL
+        activated rows. On non-reliable columns the analog outcome is
+        undefined — modeled as unchanged (MVDRAM never reads them)."""
+        x = len(rows)
+        assert x % 2 == 1 and x >= 3, "MAJX needs an odd row count >= 3"
+        votes = self.data[rows].sum(axis=0)
+        result = (votes > x // 2).astype(np.uint8)
+        out = np.where(self.reliable, result, self.data[rows[0]])
+        for r in rows:
+            self.data[r] = out
+        if x == 3:
+            self.counts.maj3 += 1
+        elif x == 5:
+            self.counts.maj5 += 1
+        else:
+            self.counts.majx_other += 1
+
+    # -- host (processor) access over the DDR data bus ------------------------
+
+    def host_write_row(self, row: int, bits: np.ndarray) -> None:
+        assert bits.shape == (self.cols,)
+        self.data[row] = bits.astype(np.uint8)
+        self.counts.host_bits_written += self.cols
+
+    def host_read_row(self, row: int) -> np.ndarray:
+        self.counts.host_bits_read += self.cols
+        return self.data[row].copy()

@@ -1,0 +1,434 @@
+"""In-DRAM GeMV via on-the-fly vector encoding (paper §V) on the horizontal
+matrix layout (paper §VI).
+
+The execution model, per subarray tile (n_sub reduction rows × m_sub outputs,
+q weight bits, p activation bits):
+
+  load      host writes the weight-bit planes once (amortized over inference):
+            bitline m*q+i, row j  holds  W^(i)[j, m]  (+ inverted rows for the
+            dual-track adder).
+  encode    the PROCESSOR scans the activation codes a_u[j] bit-by-bit and
+            emits `acc += matrix_row[j] << k` exactly when bit k of a_u[j] is
+            set (on-the-fly vector encoding). A zero bit emits either a
+            constant-zero add (conventional) or NOTHING (bit-sparsity
+            optimization, §V-D). The emitted command stream touches only
+            row addresses — the activation values never cross the data bus.
+  execute   dual-track MAJ3/MAJ5 ripple adds inside the subarray; every
+            bitline accumulates in parallel, so one add serves all m_sub
+            outputs × q weight bits at once (qM-way parallelism, §VI-D).
+  readout   the processor reads the r accumulator rows ROW-WISE and
+            shift-accumulates  o_m = Σ_b 2^b Σ_i 2^i acc_b[m*q+i]
+            — multi-bit values in natural horizontal order, no transposition.
+
+Integer partial sums from all tiles are aggregated on the host with the
+zero-point correction of `core.quant.quantized_gemv_reference`; the two paths
+are bit-identical (tested).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import numpy as np
+
+from ..quant import QuantizedTensor
+from .adder import add_row_at_offset, clear_accumulator
+from .device import OpCounts, Subarray
+from .layout import HorizontalLayout, VerticalLayout
+
+
+@dataclasses.dataclass(frozen=True)
+class PudGeometry:
+    """Physical resources available to one GeMV launch.
+
+    `subarray_cols` is the simulated width (kept small for tractability);
+    `real_cols` is the physical bitline count used by the cost model
+    (65,536 across the chips of a DDR4 rank, paper §II-B).
+    """
+
+    subarray_rows: int = 512
+    subarray_cols: int = 1024
+    real_cols: int = 65536
+    n_sub_max: int = 128          # paper §VII: N ≤ 128 per subarray
+    channels: int = 4             # four DDR4 modules (paper §VII)
+    banks_per_channel: int = 16   # concurrently computing subarrays / channel
+
+    @property
+    def parallel_tiles(self) -> int:
+        return self.channels * self.banks_per_channel
+
+
+# ---------------------------------------------------------------------------
+# On-the-fly encoding
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CommandPlan:
+    """The data-dependent part of the command stream for one tile.
+
+    adds:     (j, k) pairs — `acc += matrix_row[j] << k`; emitted only for set
+              activation bits when `sparsity` (otherwise zero-adds included
+              with src=None).
+    skipped:  count of zero bits elided by the sparsity optimization.
+    """
+
+    adds: list
+    skipped: int
+    n: int
+    p: int
+
+
+def encode_commands(a_codes: np.ndarray, p: int,
+                    sparsity: bool = True) -> CommandPlan:
+    """Scan activation codes bit-serially → add schedule (paper §V-C).
+
+    O(N·p) host work; with `sparsity`, zero bits are skipped entirely
+    (template selection by popcount in the real system, §V-D).
+    """
+    a = np.asarray(a_codes).astype(np.uint32)
+    adds, skipped = [], 0
+    for j in range(a.shape[0]):
+        for k in range(p):
+            if (a[j] >> k) & 1:
+                adds.append((j, k))
+            elif sparsity:
+                skipped += 1
+            else:
+                adds.append((None, k))  # conventional: add the zero row
+    return CommandPlan(adds=adds, skipped=skipped, n=a.shape[0], p=p)
+
+
+# ---------------------------------------------------------------------------
+# Single-subarray execution (bit-exact simulation)
+# ---------------------------------------------------------------------------
+
+def load_matrix(sub: Subarray, lay: HorizontalLayout,
+                w_codes: np.ndarray, col_base: int = 0) -> None:
+    """Preload weight bit-planes (+ complements) into the matrix rows.
+
+    w_codes: (n_sub, m_sub) unsigned codes with q bits each.
+    Placed at bitline col_base + m*q + i (Fig. 10). Constant rows written too.
+    """
+    n_sub, m_sub = w_codes.shape
+    cols = sub.cols
+    sub.host_write_row(lay.zero_row, np.zeros(cols, np.uint8))
+    sub.host_write_row(lay.one_row, np.ones(cols, np.uint8))
+    for j in range(n_sub):
+        row = np.zeros(cols, np.uint8)
+        for i in range(lay.q):
+            bits = (w_codes[j].astype(np.uint32) >> i) & 1
+            row[col_base + np.arange(m_sub) * lay.q + i] = bits
+        sub.host_write_row(lay.matrix_rows[j], row)
+        sub.host_write_row(lay.inv_matrix_rows[j], 1 - row)
+
+
+def execute_plan(sub: Subarray, lay: HorizontalLayout,
+                 plan: CommandPlan) -> None:
+    """Issue the encoded command stream (the in-DRAM compute phase)."""
+    clear_accumulator(sub, lay)
+    for j, k in plan.adds:
+        if j is None:  # conventional zero-add (sparsity disabled)
+            add_row_at_offset(sub, lay, lay.zero_row, lay.one_row,
+                              offset=k, chain_len=lay.r - k)
+        else:
+            add_row_at_offset(sub, lay, lay.matrix_rows[j],
+                              lay.inv_matrix_rows[j],
+                              offset=k, chain_len=lay.r - k)
+
+
+def read_outputs(sub: Subarray, lay: HorizontalLayout, m_sub: int,
+                 col_base: int = 0) -> np.ndarray:
+    """Row-wise readout + host shift-accumulate (no bit transposition).
+
+    Returns int64 (m_sub,) = Σ_j a_u[j] · w_u[j, m] for this tile.
+    """
+    rows = np.stack([sub.host_read_row(r) for r in lay.acc_rows])  # (r, cols)
+    weights_b = (1 << np.arange(lay.r, dtype=np.int64))[:, None]
+    col_vals = (rows.astype(np.int64) * weights_b).sum(axis=0)     # (cols,)
+    m_idx = col_base + np.arange(m_sub)[:, None] * lay.q
+    i_idx = np.arange(lay.q)[None, :]
+    out = (col_vals[m_idx + i_idx] << np.arange(lay.q, dtype=np.int64)).sum(axis=1)
+    # r row-reads already counted by host_read_row; the shift-accumulate is
+    # m_sub·q integer ops on the host (§VI-C).
+    sub.counts.host_int_ops += m_sub * lay.q
+    return out
+
+
+def mvdram_gemv_subarray(w_codes: np.ndarray, a_codes: np.ndarray,
+                         q: int, p: int, sparsity: bool = True,
+                         geom: PudGeometry = PudGeometry(),
+                         reliable_cols: Optional[np.ndarray] = None,
+                         col_base: int = 0):
+    """One-tile MVDRAM GeMV: returns (partials int64 (m,), runtime OpCounts,
+    preload OpCounts, Subarray)."""
+    n_sub, m_sub = w_codes.shape
+    lay = HorizontalLayout(n_sub=n_sub, m_sub=m_sub, q=q, p=p,
+                           subarray_rows=geom.subarray_rows,
+                           subarray_cols=geom.subarray_cols - col_base)
+    sub = Subarray(rows=geom.subarray_rows, cols=geom.subarray_cols,
+                   reliable_cols=reliable_cols)
+    load_matrix(sub, lay, w_codes, col_base)
+    preload = sub.counts
+    sub.counts = OpCounts()
+    plan = encode_commands(a_codes, p, sparsity)
+    execute_plan(sub, lay, plan)
+    out = read_outputs(sub, lay, m_sub, col_base)
+    return out, sub.counts, preload, sub
+
+
+# ---------------------------------------------------------------------------
+# Reliable-column placement (paper §VII, Table I)
+# ---------------------------------------------------------------------------
+
+def usable_output_slots(reliable: np.ndarray, q: int) -> np.ndarray:
+    """Starts of non-overlapping runs of q consecutive reliable columns.
+
+    MVDRAM only places an output's q weight-bit columns on such runs; the gaps
+    are the "slight data transfer overhead for unused columns" of §VII.
+    """
+    starts, run, i = [], 0, 0
+    n = reliable.shape[0]
+    while i < n:
+        if reliable[i]:
+            run += 1
+            if run == q:
+                starts.append(i - q + 1)
+                run = 0
+        else:
+            run = 0
+        i += 1
+    return np.asarray(starts, dtype=np.int64)
+
+
+# ---------------------------------------------------------------------------
+# Full GeMV: partition across subarrays, aggregate on host
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class TileReport:
+    n_chunks: int
+    col_chunks: int
+    tiles: int
+    runtime: OpCounts
+    preload: OpCounts
+    skipped_bits: int
+    r_bits: int
+    aggregate_bits: int  # output bits crossing the data bus
+
+
+def mvdram_gemv(aq: QuantizedTensor, wq: QuantizedTensor,
+                sparsity: bool = True,
+                geom: PudGeometry = PudGeometry(),
+                reliable_cols: Optional[np.ndarray] = None):
+    """Full MVDRAM GeMV in the integer domain + host-side dequantization.
+
+    Bit-identical to `core.quant.quantized_gemv_reference` (tested property).
+    Weight group scales must align with subarray partitions: G == 1 or
+    group_size % n_sub == 0.
+    """
+    a_u = np.asarray(aq.values, dtype=np.uint32)
+    w_u = np.asarray(wq.values, dtype=np.uint32)
+    assert a_u.ndim == 1, "GeMV takes a single activation vector"
+    n, m = w_u.shape
+    q, p = wq.spec.bits, aq.spec.bits
+    n_sub = min(geom.n_sub_max, n)
+    n_chunks = math.ceil(n / n_sub)
+    g = wq.scale.shape[0]
+    gs = n // g
+    if g > 1 and gs % n_sub:
+        raise ValueError(f"group size {gs} must be a multiple of n_sub {n_sub}")
+
+    if reliable_cols is not None:
+        slots = usable_output_slots(reliable_cols[:geom.subarray_cols], q)
+    else:
+        slots = np.arange(geom.subarray_cols // q) * q
+    m_per_tile = slots.shape[0]
+    col_chunks = math.ceil(m / m_per_tile)
+
+    partials = np.zeros((n_chunks, m), dtype=np.int64)
+    runtime, preload = OpCounts(), OpCounts()
+    skipped = 0
+    r_bits = 0
+    for ci in range(n_chunks):
+        j0, j1 = ci * n_sub, min((ci + 1) * n_sub, n)
+        for mi in range(col_chunks):
+            m0, m1 = mi * m_per_tile, min((mi + 1) * m_per_tile, m)
+            w_tile = w_u[j0:j1, m0:m1]
+            if reliable_cols is None:
+                out, rt, pre, _ = mvdram_gemv_subarray(
+                    w_tile, a_u[j0:j1], q, p, sparsity, geom)
+            else:
+                out, rt, pre = _gemv_tile_on_slots(
+                    w_tile, a_u[j0:j1], q, p, sparsity, geom,
+                    reliable_cols, slots[: m1 - m0])
+            partials[ci, m0:m1] = out
+            runtime = runtime.merge(rt)
+            preload = preload.merge(pre)
+        lay = HorizontalLayout(n_sub=j1 - j0, m_sub=1, q=q, p=p,
+                               subarray_rows=geom.subarray_rows,
+                               subarray_cols=geom.subarray_cols)
+        r_bits = max(r_bits, lay.r)
+        skipped += encode_commands(a_u[j0:j1], p, sparsity).skipped
+
+    # Host aggregation with zero-point correction (paper §II-C2 / quant.py).
+    chunk_per_group = gs // n_sub if g > 1 else n_chunks
+    acc_g = partials.reshape(g, chunk_per_group, m).sum(axis=1)      # (g, m)
+    a_g = a_u.astype(np.int64).reshape(g, gs)
+    w_g = w_u.astype(np.int64).reshape(g, gs, m)
+    sum_a = a_g.sum(axis=1)                                          # (g,)
+    sum_w = w_g.sum(axis=1)                                          # (g, m)
+    corr = (acc_g - aq.zero * sum_w - wq.zero * sum_a[:, None]
+            + gs * aq.zero * wq.zero)
+    scale = np.asarray(wq.scale, dtype=np.float64)                   # (g, m)
+    out = (corr * scale).sum(axis=0) * float(np.asarray(aq.scale).reshape(-1)[0])
+
+    report = TileReport(
+        n_chunks=n_chunks, col_chunks=col_chunks,
+        tiles=n_chunks * col_chunks, runtime=runtime, preload=preload,
+        skipped_bits=skipped, r_bits=r_bits,
+        aggregate_bits=n_chunks * col_chunks * r_bits * geom.subarray_cols)
+    return out.astype(np.float32), report
+
+
+def _gemv_tile_on_slots(w_tile, a_tile, q, p, sparsity, geom,
+                        reliable_cols, slots):
+    """Tile execution with per-output column slots on reliable runs."""
+    n_sub, m_sub = w_tile.shape
+    lay = HorizontalLayout(n_sub=n_sub, m_sub=geom.subarray_cols // q,
+                           q=q, p=p, subarray_rows=geom.subarray_rows,
+                           subarray_cols=geom.subarray_cols)
+    sub = Subarray(rows=geom.subarray_rows, cols=geom.subarray_cols,
+                   reliable_cols=reliable_cols[:geom.subarray_cols])
+    cols = sub.cols
+    sub.host_write_row(lay.zero_row, np.zeros(cols, np.uint8))
+    sub.host_write_row(lay.one_row, np.ones(cols, np.uint8))
+    for j in range(n_sub):
+        row = np.zeros(cols, np.uint8)
+        for i in range(q):
+            row[slots[:m_sub] + i] = (w_tile[j].astype(np.uint32) >> i) & 1
+        sub.host_write_row(lay.matrix_rows[j], row)
+        sub.host_write_row(lay.inv_matrix_rows[j], 1 - row)
+    preload = sub.counts
+    sub.counts = OpCounts()
+    execute_plan(sub, lay, encode_commands(a_tile, p, sparsity))
+    rows = np.stack([sub.host_read_row(r) for r in lay.acc_rows])
+    col_vals = (rows.astype(np.int64)
+                * (1 << np.arange(lay.r, dtype=np.int64))[:, None]).sum(axis=0)
+    idx = slots[:m_sub, None] + np.arange(q)[None, :]
+    out = (col_vals[idx] << np.arange(q, dtype=np.int64)).sum(axis=1)
+    sub.counts.host_int_ops += m_sub * q
+    return out, sub.counts, preload
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost models (same formulas as the simulator; validated by test)
+# ---------------------------------------------------------------------------
+
+def adder_cost(chain_len: int) -> OpCounts:
+    """Op count of one `add_row_at_offset` with the given ripple length.
+
+    Derived from adder.py: per bit 22 RowCopy + 2 MAJ3 + 2 MAJ5; +2 RowCopy
+    carry-track initialization.
+    """
+    return OpCounts(row_copy=22 * chain_len + 2, maj3=2 * chain_len,
+                    maj5=2 * chain_len)
+
+
+def mvdram_tile_cost(n_sub: int, q: int, p: int, bit_density: float,
+                     sparsity: bool = True, r: Optional[int] = None) -> OpCounts:
+    """Expected runtime ops of one subarray tile.
+
+    bit_density = average fraction of set activation bits (paper uses 50%).
+    Chain length of an add at bit-offset k is r - k (static templates, §V-C).
+    """
+    if r is None:
+        r = p + math.ceil(math.log2(max(n_sub, 2))) + 1
+    c = OpCounts(row_copy=2 * r)  # clear_accumulator
+    for k in range(p):
+        n_adds = n_sub * (bit_density if sparsity else 1.0)
+        a = adder_cost(r - k)
+        c = c.merge(OpCounts(
+            row_copy=int(round(a.row_copy * n_adds)),
+            maj3=int(round(a.maj3 * n_adds)),
+            maj5=int(round(a.maj5 * n_adds))))
+    return c
+
+
+@dataclasses.dataclass
+class GemvCost:
+    """Analytic cost of a full M×N q-bit × p-bit GeMV (one engine launch)."""
+
+    m: int
+    n: int
+    q: int
+    p: int
+    tiles: int
+    waves: int                 # ceil(tiles / geom.parallel_tiles)
+    ops_per_tile: OpCounts
+    runtime: OpCounts          # all tiles
+    r_bits: int
+    aggregate_bits: int        # DRAM→host output bits
+    encode_host_ops: int       # O(N·p) command-template patching
+    vector_prearrange_bits: int  # host→DRAM activation writes (0 for MVDRAM)
+
+
+def mvdram_gemv_cost(m: int, n: int, q: int, p: int,
+                     bit_density: float = 0.5, sparsity: bool = True,
+                     geom: PudGeometry = PudGeometry(),
+                     usable_cols: Optional[int] = None) -> GemvCost:
+    """Cost of MVDRAM's horizontal-layout GeMV at real-DRAM geometry."""
+    cols = usable_cols if usable_cols is not None else geom.real_cols
+    n_sub = min(geom.n_sub_max, n)
+    n_chunks = math.ceil(n / n_sub)
+    m_per_tile = cols // q
+    col_chunks = math.ceil(m / m_per_tile)
+    tiles = n_chunks * col_chunks
+    r = p + math.ceil(math.log2(max(n_sub, 2))) + 1
+    per_tile = mvdram_tile_cost(n_sub, q, p, bit_density, sparsity, r)
+    runtime = per_tile.scaled(tiles)
+    agg_bits = tiles * r * cols
+    runtime.host_bits_read = agg_bits
+    runtime.host_int_ops = tiles * min(m, m_per_tile) * q
+    return GemvCost(m=m, n=n, q=q, p=p, tiles=tiles,
+                    waves=math.ceil(tiles / geom.parallel_tiles),
+                    ops_per_tile=per_tile, runtime=runtime, r_bits=r,
+                    aggregate_bits=agg_bits, encode_host_ops=n * p,
+                    vector_prearrange_bits=0)
+
+
+def conventional_pud_cost(m: int, n: int, q: int, p: int,
+                          bit_density: float = 0.5,
+                          geom: PudGeometry = PudGeometry()) -> GemvCost:
+    """Cost of the conventional vertical-layout PUD GeMV (paper §III, Fig. 5).
+
+    One column per output ⇒ M columns used; the p-bit activation vector must
+    be PRE-ARRANGED into every output's column (M·N·p host-written bits), and
+    outputs come back bit-transposed (host transpose ops ∝ M·r).
+    """
+    lay = VerticalLayout(n_sub=1, m_sub=1, q=q, p=p)  # for r only
+    # Rows limit the reduction chunk: each column stacks n_v·(q+p) operand bits.
+    n_v = max(1, (geom.subarray_rows - 2 * lay.r - 16) // (q + p))
+    n_chunks = math.ceil(n / n_v)
+    col_chunks = math.ceil(m / geom.real_cols)
+    tiles = n_chunks * col_chunks
+    r = lay.r
+    # Per column-MAC: q·p AND partial products (MAJ3 + 4 copies each) and
+    # (q·p - 1) ripple adds of ~r bits to accumulate them + n_v accumulations.
+    per_mac = OpCounts(row_copy=5 * q * p, maj3=q * p)
+    adds_per_mac = q * p  # partial-product aggregation (bit-serial)
+    add = adder_cost(r)
+    per_col = OpCounts(
+        row_copy=(per_mac.row_copy + add.row_copy * adds_per_mac) * n_v,
+        maj3=(per_mac.maj3 + add.maj3 * adds_per_mac) * n_v,
+        maj5=add.maj5 * adds_per_mac * n_v)
+    runtime = per_col.scaled(tiles)  # all M columns advance in lock-step
+    agg_bits = tiles * r * geom.real_cols
+    runtime.host_bits_read = agg_bits
+    runtime.host_bits_written = m * n * p  # the pre-arranging cost (§V-A)
+    runtime.host_int_ops = m * r * n_chunks  # bit-transposition (§VI-A)
+    return GemvCost(m=m, n=n, q=q, p=p, tiles=tiles,
+                    waves=math.ceil(tiles / geom.parallel_tiles),
+                    ops_per_tile=per_col, runtime=runtime, r_bits=r,
+                    aggregate_bits=agg_bits, encode_host_ops=0,
+                    vector_prearrange_bits=m * n * p)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+bitplane_gemv    — the paper's horizontal-layout GeMV on packed bit-planes
+quant_matmul     — fused-dequant packed-code matmul (serving baseline)
+decode_attention — flash-decode vs position-stamped (bf16|int8) KV caches
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd public wrapper), ref.py (pure-jnp oracle); tests sweep
+shapes/dtypes in interpret mode against the oracles.
+"""

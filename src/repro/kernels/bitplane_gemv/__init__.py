@@ -1,0 +1,3 @@
+"""Bit-plane GeMV — the TPU-native realization of MVDRAM's horizontal
+matrix layout (packed weight bit-planes in HBM, unpack + MAC in VMEM)."""
+from .ops import bitplane_gemv, bitplane_gemv_bitserial

@@ -1,0 +1,140 @@
+"""Pallas TPU kernels for bit-plane GeMV.
+
+TPU adaptation of the paper's §VI horizontal layout:
+
+  * DRAM bitlines → the 128-lane dimension: a (bn, bm) weight-bit tile is
+    MAC'd for all bm outputs at once, the analogue of qM-column parallelism.
+  * Bits stay PACKED in HBM (uint32 words carry 32 reduction-dim bits) and
+    are expanded only inside VMEM — HBM traffic is q/16 of a bf16 matrix,
+    which is exactly the resource the paper saves in DRAM capacity.
+  * MAJ-based AND/adder trees → MXU dot products against 0/1 planes with
+    power-of-two plane weights folded in f32/int32 accumulators.
+  * The paper's processor-side zero-point correction (§II-C2) is the kernel
+    epilogue, computed per reduction tile so per-group scales stay local.
+
+Both kernels accumulate across the reduction grid axis into the output block
+(grid = (m_tiles, n_tiles), out indexed by m only — revisited blocks persist
+in VMEM, initialized at n==0).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _unpack_words(words: jax.Array, bn: int) -> jax.Array:
+    """(W, bm) uint32 → (W*32, bm) {0,1} int8; bit j of word w = row w*32+j."""
+    w, bm = words.shape
+    shifts = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
+    bits = (words[:, None, :] >> shifts) & jnp.uint32(1)
+    return bits.reshape(w * 32, bm)[:bn].astype(jnp.int8)
+
+
+# ---------------------------------------------------------------------------
+# float-activation kernel:  out[b, m] = Σ_g scale[g, m]·(Σ_i 2^i a_g·W_g^(i)
+#                                                        − z_w·Σ a_g)
+# ---------------------------------------------------------------------------
+
+def _gemv_f_kernel(a_ref, planes_ref, scale_ref, out_ref, *, q: int,
+                   zero: int, bn: int):
+    n_idx = pl.program_id(1)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a_blk = a_ref[...].astype(jnp.float32)              # (B, bn)
+    acc = jnp.zeros((a_blk.shape[0], out_ref.shape[1]), jnp.float32)
+    for i in range(q):                                   # q ≤ 8: unrolled
+        plane = _unpack_words(planes_ref[i], bn).astype(jnp.float32)
+        acc += (2.0 ** i) * jax.lax.dot(
+            a_blk, plane, precision=jax.lax.Precision.HIGHEST)
+    corr = acc - zero * jnp.sum(a_blk, axis=-1, keepdims=True)
+    out_ref[...] += corr * scale_ref[...]                # (1, bm) broadcast
+
+
+def gemv_f_pallas(a, planes, scale_tiles, *, q: int, zero: int,
+                  bn: int, bm: int, interpret: bool = False):
+    """a (B, N) float; planes (q, N//32, M) uint32; scale_tiles (N//bn, M).
+
+    N must divide by bn (pad upstream: a with 0), M by bm.
+    """
+    b, n = a.shape
+    m = planes.shape[-1]
+    wpb = bn // 32  # packed words per reduction block
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_gemv_f_kernel, q=q, zero=zero, bn=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, bn), lambda mi, ni: (0, ni)),
+            pl.BlockSpec((q, wpb, bm), lambda mi, ni: (0, ni, mi)),
+            pl.BlockSpec((1, bm), lambda mi, ni: (ni, mi)),
+        ],
+        out_specs=pl.BlockSpec((b, bm), lambda mi, ni: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(a, planes, scale_tiles)
+
+
+# ---------------------------------------------------------------------------
+# bit-serial kernel: both operands decomposed to planes — the exact integer
+# computation MVDRAM performs in DRAM (AND + weighted popcount-accumulate).
+# ---------------------------------------------------------------------------
+
+def _gemv_bs_kernel(a_ref, planes_ref, scale_ref, out_ref, *, q: int, p: int,
+                    z_a: int, z_w: int, bn: int):
+    n_idx = pl.program_id(1)
+
+    @pl.when(n_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    a_codes = a_ref[...]                                  # (B, bn) uint8 codes
+    b = a_codes.shape[0]
+    bm = out_ref.shape[1]
+    acc = jnp.zeros((b, bm), jnp.int32)
+    col_sum = jnp.zeros((1, bm), jnp.int32)               # Σ_j w_u[j, m]
+    for i in range(q):
+        plane = _unpack_words(planes_ref[i], bn)          # (bn, bm) int8
+        col_sum += (1 << i) * jnp.sum(plane.astype(jnp.int32), axis=0,
+                                      keepdims=True)
+        for k in range(p):
+            a_bit = ((a_codes >> k) & 1).astype(jnp.int8)  # (B, bn)
+            # a^(k) AND W^(i), popcount-accumulated: an int MXU matmul.
+            partial = jax.lax.dot(a_bit, plane,
+                                  preferred_element_type=jnp.int32)
+            acc += (1 << (i + k)) * partial
+    sum_a = jnp.sum(a_codes.astype(jnp.int32), axis=-1, keepdims=True)
+    corr = acc - z_a * col_sum - z_w * sum_a + bn * z_a * z_w
+    out_ref[...] += corr.astype(jnp.float32) * scale_ref[...]
+
+
+def gemv_bs_pallas(a_codes, planes, scale_tiles, *, q: int, p: int,
+                   z_a: int, z_w: int, bn: int, bm: int,
+                   interpret: bool = False):
+    """a_codes (B, N) uint8 (pad with z_a); planes (q, N//32, M) uint32."""
+    b, n = a_codes.shape
+    m = planes.shape[-1]
+    wpb = bn // 32
+    grid = (m // bm, n // bn)
+    return pl.pallas_call(
+        functools.partial(_gemv_bs_kernel, q=q, p=p, z_a=z_a, z_w=z_w, bn=bn),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((b, bn), lambda mi, ni: (0, ni)),
+            pl.BlockSpec((q, wpb, bm), lambda mi, ni: (0, ni, mi)),
+            pl.BlockSpec((1, bm), lambda mi, ni: (ni, mi)),
+        ],
+        out_specs=pl.BlockSpec((b, bm), lambda mi, ni: (0, mi)),
+        out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(a_codes, planes, scale_tiles)

@@ -1,0 +1,5 @@
+"""Flash-decode attention kernel: one query token against a (possibly
+int8-quantized) KV cache, blocked over the sequence axis with running
+(max, denom) in VMEM — the fused fix for the dequant/convert HBM traffic
+identified in EXPERIMENTS.md §Perf cell C."""
+from .ops import decode_attention

@@ -1,0 +1,57 @@
+"""Public wrapper: GQA expansion, block padding, bf16/int8 cache dispatch."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from . import kernel, ref
+
+DEFAULT_BLOCK = 1024
+
+
+@functools.partial(jax.jit, static_argnames=("window", "impl", "block"))
+def decode_attention(pos, q, k, v, kv_positions,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None, *,
+                     window: Optional[int] = None, impl: str = "jnp",
+                     block: int = DEFAULT_BLOCK) -> jax.Array:
+    """One-token attention against a position-stamped cache.
+
+    pos: scalar or (B,) i32 per-lane positions; q (B, H, D);
+    k/v (B, S, Hkv, D) bf16 — or int8 with k_scale/v_scale (B, S, Hkv);
+    kv_positions (B, S) per-lane stamps (a (S,) vector is broadcast).
+    Returns (B, H, D) in q.dtype.
+    """
+    b, h, d = q.shape
+    s, hkv = k.shape[1], k.shape[2]
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    kv_positions = jnp.broadcast_to(jnp.asarray(kv_positions, jnp.int32),
+                                    (b, s))
+    if hkv != h:                                  # GQA: expand kv heads
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        if k_scale is not None:
+            k_scale = jnp.repeat(k_scale, rep, axis=2)
+            v_scale = jnp.repeat(v_scale, rep, axis=2)
+    if k_scale is None:
+        k_scale = jnp.ones((b, s, h), jnp.float32)
+        v_scale = jnp.ones((b, s, h), jnp.float32)
+    blk = min(block, s)
+    pad = (-s) % blk
+    if pad:
+        padf = lambda x, val=0: jnp.pad(
+            x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2),
+            constant_values=val)
+        k, v = padf(k), padf(v)
+        k_scale, v_scale = padf(k_scale), padf(v_scale)
+        kv_positions = padf(kv_positions, -1)
+    args = (pos, q, k, v, kv_positions, k_scale, v_scale)
+    kw = dict(scale=d ** -0.5, window=window)
+    if impl == "jnp":
+        return ref.decode_attention_ref(*args, **kw)
+    return kernel.decode_attention_pallas(
+        *args, **kw, block=blk, interpret=(impl == "pallas_interpret"))

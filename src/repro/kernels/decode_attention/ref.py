@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for flash-decode (shape-for-shape with the kernel)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -2.3819763e38
+
+
+def decode_attention_ref(pos, q, k, v, kv_positions, k_scale, v_scale, *,
+                         scale: float, window):
+    """Same contract as kernel.decode_attention_pallas, dense softmax."""
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    if k.dtype == jnp.int8:
+        kf = kf * k_scale.astype(jnp.float32)[..., None]
+        vf = vf * v_scale.astype(jnp.float32)[..., None]
+    s = jnp.einsum("bhd,bthd->bht", q.astype(jnp.float32), kf) * scale
+    ok = (kv_positions >= 0) & (kv_positions <= pos[:, None])     # (B, S)
+    if window is not None:
+        ok &= (pos[:, None] - kv_positions) < window
+    s = jnp.where(ok[:, None, :], s, NEG_INF)
+    w = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    w = w / w.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bht,bthd->bhd", w, vf)
+    return out.astype(q.dtype)

@@ -1,0 +1,3 @@
+"""Fused dequantize-matmul over packed integer codes — the TPU stand-in for
+the paper's processor-side (ggml-style) low-bit GeMV baseline."""
+from .ops import quant_matmul, pack_weight_codes

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for quant_matmul (shape-for-shape with the kernel)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def unpack_codes_axis0(words, q: int, n: int):
+    per = 32 // q
+    shifts = (jnp.arange(per, dtype=jnp.uint32) * q)[None, :, None]
+    mask = jnp.uint32((1 << q) - 1)
+    codes = (words[:, None, :] >> shifts) & mask
+    return codes.reshape(words.shape[0] * per, words.shape[-1])[:n]
+
+
+def quant_matmul_ref(a, codes_packed, scale_tiles, *, q: int, zero: int,
+                     bn: int, bm: int):
+    b, n = a.shape
+    m = codes_packed.shape[-1]
+    codes = unpack_codes_axis0(codes_packed, q, n).astype(jnp.float32)
+    t = n // bn
+    c_t = codes.reshape(t, bn, m)
+    w_t = (c_t - zero) * scale_tiles[:, None, :]
+    a_t = a.astype(jnp.float32).reshape(b, t, bn)
+    return jnp.einsum("btn,tnm->bm", a_t, w_t)

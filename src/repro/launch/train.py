@@ -1,0 +1,62 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch gemma2-2b --tiny \
+        --steps 200 --batch 8 --seq 128 --ckpt-dir /tmp/run1
+
+On a real fleet this process is started per-host by the cluster manager and
+jax.distributed.initialize() wires the pods together; on this container it
+drives the same code on the local device(s). `--mesh-model N` requests an
+N-way model axis over whatever devices exist.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from ..configs import ARCHS, get_config, tiny_config
+from ..models.model import stack_plan
+from ..optim.adamw import AdamWConfig
+from ..train.loop import Trainer, TrainerConfig
+from .mesh import make_host_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(ARCHS))
+    ap.add_argument("--tiny", action="store_true",
+                    help="reduced config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--mesh-model", type=int, default=1)
+    ap.add_argument("--remat", action="store_true")
+    args = ap.parse_args()
+
+    cfg = tiny_config(args.arch) if args.tiny else get_config(args.arch)
+    mesh = make_host_mesh(model=args.mesh_model) \
+        if len(jax.devices()) > 1 else None
+    print(f"arch={cfg.name} plan={stack_plan(cfg)} devices="
+          f"{len(jax.devices())} mesh={mesh and mesh.shape}")
+
+    trainer = Trainer(
+        cfg,
+        AdamWConfig(lr=args.lr, total_steps=args.steps,
+                    warmup_steps=max(args.steps // 20, 5)),
+        TrainerConfig(num_microbatches=args.microbatches, remat=args.remat,
+                      ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every),
+        mesh=mesh, global_batch=args.batch, seq_len=args.seq)
+    _, _, history = trainer.run(args.steps)
+    for h in history:
+        print(json.dumps(h))
+    if trainer.straggler_events:
+        print("straggler events:", trainer.straggler_events)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""Model zoo: one composable decoder-LM family covering every assigned
+architecture (dense GQA, MoE, MLA+MoE, local/global, SSM, hybrid)."""
+from .config import (AttnConfig, MLAConfig, ModelConfig, MoEConfig, SSMConfig)
+from .model import (Model, init_params, param_defs, param_pspecs)

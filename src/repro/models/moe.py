@@ -1,0 +1,151 @@
+"""Mixture-of-Experts FFN with capacity-based dispatch (GShard-style).
+
+Experts live on the "experts" logical axis (→ model mesh axis); dispatch and
+combine are einsums against one-hot capacity tensors so XLA lowers them to
+all-to-alls over the expert axis — no per-token gather/scatter, fully
+static shapes (required for the multi-pod dry-run).
+
+Supports the two assigned MoE flavours:
+  deepseek-v2-lite: 64 routed / top-6 + 2 always-on shared experts,
+                    first layer dense (first_dense=1).
+  qwen2-moe:        60 routed / top-4 + 4 shared experts (padded to 64
+                    routed on 16-wide model axes by the config).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from .config import MoEConfig
+from .layers import dense
+
+
+GROUP_SIZE = 256   # tokens per dispatch group (GShard "group" dim)
+
+
+def _expert_mm(xe, w, impl="jnp"):
+    """Per-expert matmul (G,E,C,din) × w → (G,E,C,dout).
+
+    `w` is a dense (E, din, dout) array — or an E-stacked BitplaneWeights,
+    in which case each expert's tile goes through the MVDRAM bit-plane
+    engine (the per-expert GeMV batch the paper's low-bit path serves)."""
+    from ..core.bitplane import BitplaneWeights
+    if isinstance(w, BitplaneWeights):
+        from ..kernels.bitplane_gemv import ops as bp
+        g, e, c, din = xe.shape
+        xt = xe.transpose(1, 0, 2, 3).reshape(e, g * c, din)
+        out = jax.vmap(lambda xx, ww: bp.bitplane_gemv(xx, ww, impl=impl))(
+            xt, w)
+        return (out.reshape(e, g, c, -1).transpose(1, 0, 2, 3)
+                .astype(xe.dtype))
+    return jnp.einsum("gecd,edf->gecf", xe, w.astype(xe.dtype))
+
+
+def _capacity(tokens: int, cfg: MoEConfig) -> int:
+    c = int(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts)
+    return max(8, (c + 7) // 8 * 8)   # pad to 8 for clean tiling
+
+
+def router(x, w_router, cfg: MoEConfig):
+    """x (..., E_model) → gates (..., Ex), topk mask (..., Ex), aux loss."""
+    logits = dense(x, w_router).astype(jnp.float32)        # (..., Ex)
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top_idx = jax.lax.top_k(probs, cfg.top_k)           # (..., k)
+    mask = jax.nn.one_hot(top_idx, cfg.num_experts,
+                          dtype=jnp.float32).sum(axis=-2)  # (..., Ex) {0,1}
+    gates = probs * mask
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    # load-balancing auxiliary loss (Switch/GShard form), over ALL tokens
+    me = probs.reshape(-1, cfg.num_experts).mean(axis=0)
+    ce = mask.reshape(-1, cfg.num_experts).mean(axis=0) / cfg.top_k
+    aux = cfg.num_experts * jnp.sum(me * ce) * cfg.router_aux_weight
+    return gates, mask, aux
+
+
+def moe_ffn(x, p, cfg: MoEConfig, ffn_type: str = "glu",
+            act_bits=None, impl="jnp", group_size: int = GROUP_SIZE):
+    """x (B, S, E) → (B, S, E), aux loss.
+
+    GShard-style grouped capacity dispatch: tokens are partitioned into
+    groups of `group_size`, each with capacity C = S_g·k·cf/E, so the
+    dispatch one-hot is (G, S_g, Ex, C) — LINEAR in token count (the
+    ungrouped (T, Ex, C_T) tensor is quadratic and explodes at 8k+ tokens
+    per device). Groups inherit the batch sharding; experts shard over the
+    model axis, so dispatch/combine einsums lower to all-to-alls.
+
+    Params p: router (E, Ex); w_up/w_gate (Ex, E, F); w_down (Ex, F, E);
+    shared_* optional fused shared-expert FFN.
+    """
+    b, s, e = x.shape
+    t = b * s
+    gsz = min(group_size, t)
+    if t % gsz:
+        gsz = t            # fall back to one group (tiny/odd shapes)
+    g = t // gsz
+    xf = x.reshape(g, gsz, e)
+    gates, mask, aux = router(xf, p["router"], cfg)          # (G,S,Ex)
+    cap = _capacity(gsz, cfg)
+
+    # position of each token within its expert's per-group buffer
+    pos_in_e = (jnp.cumsum(mask, axis=1) - 1.0) * mask       # (G,S,Ex)
+    keep = mask * (pos_in_e < cap)
+    pos_oh = jax.nn.one_hot(pos_in_e.astype(jnp.int32), cap,
+                            dtype=x.dtype)                   # (G,S,Ex,C)
+    dispatch = keep.astype(x.dtype)[..., None] * pos_oh
+    combine = (gates * keep).astype(x.dtype)[..., None] * pos_oh
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch, xf)
+    xe = constrain(xe, "batch", "experts", "capacity", "embed")
+    if ffn_type == "glu":
+        up = _expert_mm(xe, p["w_up"], impl)
+        gt = _expert_mm(xe, p["w_gate"], impl)
+        h = jax.nn.gelu(gt.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = jax.nn.gelu(_expert_mm(xe, p["w_up"], impl)
+                        .astype(jnp.float32)).astype(x.dtype)
+    h = constrain(h, "batch", "experts", "capacity", "expert_mlp")
+    ye = _expert_mm(h, p["w_down"], impl)
+    out = jnp.einsum("gsec,gecd->gsd", combine, ye)
+
+    if "shared_up" in p:  # always-on shared expert(s), fused into one FFN
+        xt = xf.reshape(t, e)
+        sup = dense(xt, p["shared_up"], act_bits=act_bits, impl=impl)
+        sgt = dense(xt, p["shared_gate"], act_bits=act_bits, impl=impl)
+        sh = jax.nn.gelu(sgt.astype(jnp.float32)).astype(x.dtype) * sup
+        out = (out.reshape(t, e)
+               + dense(sh, p["shared_down"], act_bits=act_bits, impl=impl))
+    return out.reshape(b, s, e), aux
+
+
+def moe_decode(x, p, cfg: MoEConfig, ffn_type: str = "glu",
+               act_bits=None, impl="jnp"):
+    """Decode-time MoE: tiny token count — dense-gather per top-k expert.
+
+    With T = batch tokens (no capacity dropping at decode), compute the k
+    selected experts per token via one-hot weight gathers: each selected
+    expert FFN is a GeMV — the paper's per-expert low-bit GeMV case.
+    """
+    b, s, e = x.shape
+    t = b * s
+    xf = x.reshape(t, e)
+    gates, mask, _ = router(xf, p["router"], cfg)
+    # (T, Ex) gates; contract expert FFNs weighted by gate (capacity-free)
+    if ffn_type == "glu":
+        up = jnp.einsum("td,edf->tef", xf, p["w_up"].astype(x.dtype))
+        gt = jnp.einsum("td,edf->tef", xf, p["w_gate"].astype(x.dtype))
+        h = jax.nn.gelu(gt.astype(jnp.float32)).astype(x.dtype) * up
+    else:
+        h = jax.nn.gelu(jnp.einsum(
+            "td,edf->tef", xf, p["w_up"].astype(x.dtype)
+        ).astype(jnp.float32)).astype(x.dtype)
+    h = h * gates.astype(x.dtype)[..., None]   # zero for unselected experts
+    out = jnp.einsum("tef,efd->td", h, p["w_down"].astype(x.dtype))
+    if "shared_up" in p:
+        sup = dense(xf, p["shared_up"], act_bits=act_bits, impl=impl)
+        sgt = dense(xf, p["shared_gate"], act_bits=act_bits, impl=impl)
+        sh = jax.nn.gelu(sgt.astype(jnp.float32)).astype(x.dtype) * sup
+        out = out + dense(sh, p["shared_down"], act_bits=act_bits, impl=impl)
+    return out.reshape(b, s, e)

@@ -1,0 +1,197 @@
+"""Mamba2 (state-space duality) block — training (chunked SSD) and decode
+(constant-state recurrence) paths.
+
+Shapes follow the Mamba2 paper: d_inner = expand·d_model splits into H heads
+of P = head_dim; B/C projections have G groups of N = d_state channels
+(heads share group g = h·G//H). The chunked algorithm computes, per chunk of
+Q tokens,
+    intra:  Y_ij = C_i·B_j · exp(Σ_{t∈(j,i]} a_t) · dt_j x_j   (j ≤ i)
+    inter:  running state S carried across chunks by one lax.scan
+so training cost is O(L·Q) + O(L/Q) scan steps, and decode keeps a single
+(B, H, P, N) state per layer — the property that makes long_500k runnable
+for the SSM/hybrid architectures.
+
+The in/out/conv projections are GeMV-shaped at decode and route through
+`dense` (bit-plane-servable); the recurrence itself is elementwise and stays
+in floating point — the paper's technique is N/A there (DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..parallel.sharding import constrain
+from .config import ModelConfig, SSMConfig
+from .layers import dense, rmsnorm
+
+
+def _split_proj(zxbcdt, cfg: ModelConfig):
+    s = cfg.ssm
+    di, g, n, h = cfg.d_inner, s.n_groups, s.d_state, cfg.ssm_heads
+    idx = [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n]
+    z = zxbcdt[..., :idx[0]]
+    x = zxbcdt[..., idx[0]:idx[1]]
+    bmat = zxbcdt[..., idx[1]:idx[2]]
+    cmat = zxbcdt[..., idx[2]:idx[3]]
+    dt = zxbcdt[..., idx[3]:idx[3] + h]
+    return z, x, bmat, cmat, dt
+
+
+def causal_conv(x, w, b):
+    """Depthwise causal conv. x (B,L,C), w (K,C), b (C,)."""
+    k = w.shape[0]
+    l = x.shape[1]
+    pad = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + l] * w[i][None, None] for i in range(k))
+    return out + b
+
+
+def conv_step(x_t, conv_state, w, b):
+    """x_t (B,C); conv_state (B,K-1,C) → (out (B,C), new state)."""
+    window = jnp.concatenate([conv_state, x_t[:, None]], axis=1)  # (B,K,C)
+    out = jnp.einsum("bkc,kc->bc", window, w) + b
+    return out, window[:, 1:]
+
+
+def _segsum(a):
+    """a (..., Q) → (..., Q, Q): M[i,j] = Σ_{t∈(j,i]} a_t for i≥j else −inf."""
+    q = a.shape[-1]
+    cum = jnp.cumsum(a, axis=-1)
+    diff = cum[..., :, None] - cum[..., None, :]
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_forward(x, bmat, cmat, dt, a_log, d_skip, chunk: int):
+    """Chunked SSD scan.
+
+    x (B,L,H,P); bmat/cmat (B,L,G,N); dt (B,L,H) (post-softplus);
+    a_log (H,); d_skip (H,). Returns y (B,L,H,P) and final state (B,H,P,N).
+    """
+    bsz, l, h, p = x.shape
+    g, n = bmat.shape[2], bmat.shape[3]
+    rep = h // g
+    q = min(chunk, l)
+    assert l % q == 0, f"seq {l} must divide by chunk {q}"
+    nc = l // q
+    f32 = jnp.float32
+    a = (-jnp.exp(a_log.astype(f32)))[None, None] * dt.astype(f32)  # (B,L,H)
+    xr = (x.astype(f32) * dt.astype(f32)[..., None]).reshape(bsz, nc, q, h, p)
+    br = jnp.repeat(bmat.astype(f32), rep, axis=2).reshape(bsz, nc, q, h, n)
+    cr = jnp.repeat(cmat.astype(f32), rep, axis=2).reshape(bsz, nc, q, h, n)
+    ar = a.reshape(bsz, nc, q, h)
+    cum = jnp.cumsum(ar, axis=2)                                  # (B,nc,Q,H)
+
+    # intra-chunk (diagonal blocks)
+    lmat = jnp.exp(_segsum(ar.transpose(0, 1, 3, 2)))             # (B,nc,H,Q,Q)
+    scores = jnp.einsum("bcihn,bcjhn->bchij", cr, br)             # (B,nc,H,Q,Q)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", scores * lmat, xr)
+
+    # chunk-final states and inter-chunk running state
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)               # (B,nc,Q,H)
+    s_chunk = jnp.einsum("bcjhn,bcjh,bcjhp->bchpn", br, decay_to_end, xr)
+    chunk_decay = jnp.exp(cum[:, :, -1])                          # (B,nc,H)
+
+    def step(s_run, inp):
+        dec, s_c = inp
+        new = dec[:, :, None, None] * s_run + s_c
+        return new, s_run
+
+    s0 = jnp.zeros((bsz, h, p, n), f32)
+    s_final, s_before = jax.lax.scan(
+        step, s0, (chunk_decay.transpose(1, 0, 2), s_chunk.transpose(1, 0, 2, 3, 4)))
+    s_before = s_before.transpose(1, 0, 2, 3, 4)                  # (B,nc,H,P,N)
+
+    y_off = jnp.einsum("bcihn,bcih,bchpn->bcihp", cr, jnp.exp(cum), s_before)
+    y = (y_diag + y_off).reshape(bsz, l, h, p)
+    y = y + d_skip.astype(f32)[None, None, :, None] * x.astype(f32)
+    return y.astype(x.dtype), s_final
+
+
+def ssd_step(x_t, b_t, c_t, dt_t, a_log, d_skip, state):
+    """One-token recurrence. x_t (B,H,P); b_t/c_t (B,G,N); dt_t (B,H);
+    state (B,H,P,N)."""
+    bsz, h, p = x_t.shape
+    g, n = b_t.shape[1], b_t.shape[2]
+    rep = h // g
+    f32 = jnp.float32
+    bh = jnp.repeat(b_t.astype(f32), rep, axis=1)                 # (B,H,N)
+    ch = jnp.repeat(c_t.astype(f32), rep, axis=1)
+    da = jnp.exp(-jnp.exp(a_log.astype(f32))[None] * dt_t.astype(f32))
+    xd = x_t.astype(f32) * dt_t.astype(f32)[..., None]            # (B,H,P)
+    new_state = (da[..., None, None] * state
+                 + jnp.einsum("bhp,bhn->bhpn", xd, bh))
+    y = jnp.einsum("bhpn,bhn->bhp", new_state, ch)
+    y = y + d_skip.astype(f32)[None, :, None] * x_t.astype(f32)
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block
+# ---------------------------------------------------------------------------
+
+def mamba_forward(x, p, cfg: ModelConfig, act_bits=None, impl="jnp"):
+    """Full-sequence Mamba2 block. x (B,S,E) → (B,S,E), decode cache
+    ({"conv": raw tail window, "ssm": final state})."""
+    s = cfg.ssm
+    bsz, l, _ = x.shape
+    h, pd = cfg.ssm_heads, s.head_dim
+    zxbcdt = dense(x, p["in_proj"], act_bits=act_bits, impl=impl)
+    z, xs, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)
+    conv_out = jax.nn.silu(causal_conv(conv_in, p["conv_w"], p["conv_b"])
+                           .astype(jnp.float32)).astype(x.dtype)
+    xs = conv_out[..., :cfg.d_inner].reshape(bsz, l, h, pd)
+    xs = constrain(xs, "batch", "seq", "inner", None)
+    bmat = conv_out[..., cfg.d_inner:cfg.d_inner + s.n_groups * s.d_state]
+    cmat = conv_out[..., cfg.d_inner + s.n_groups * s.d_state:]
+    bmat = bmat.reshape(bsz, l, s.n_groups, s.d_state)
+    cmat = cmat.reshape(bsz, l, s.n_groups, s.d_state)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, state = ssd_forward(xs, bmat, cmat, dtv, p["a_log"], p["d_skip"],
+                           s.chunk)
+    y = y.reshape(bsz, l, cfg.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"]["scale"])
+    out = dense(y, p["out_proj"], act_bits=act_bits, impl=impl)
+    k = s.d_conv - 1
+    tail = jnp.pad(conv_in, ((0, 0), (max(0, k - l), 0), (0, 0)))[:, -k:]
+    return out, {"conv": tail, "ssm": state}
+
+
+def mamba_decode(x, p, cfg: ModelConfig, cache, act_bits=None, impl="jnp"):
+    """One-token Mamba2 step. cache = {"conv": (B,K-1,C), "ssm": (B,H,P,N)}."""
+    s = cfg.ssm
+    bsz = x.shape[0]
+    h, pd = cfg.ssm_heads, s.head_dim
+    zxbcdt = dense(x[:, 0], p["in_proj"], act_bits=act_bits, impl=impl)
+    z, xs, bmat, cmat, dt = _split_proj(zxbcdt, cfg)
+    conv_in = jnp.concatenate([xs, bmat, cmat], axis=-1)          # (B,C)
+    conv_out, conv_state = conv_step(conv_in, cache["conv"],
+                                     p["conv_w"], p["conv_b"])
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(x.dtype)
+    xs = conv_out[..., :cfg.d_inner].reshape(bsz, h, pd)
+    bmat = conv_out[..., cfg.d_inner:cfg.d_inner + s.n_groups * s.d_state]
+    cmat = conv_out[..., cfg.d_inner + s.n_groups * s.d_state:]
+    bmat = bmat.reshape(bsz, s.n_groups, s.d_state)
+    cmat = cmat.reshape(bsz, s.n_groups, s.d_state)
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, ssm_state = ssd_step(xs, bmat, cmat, dtv, p["a_log"], p["d_skip"],
+                            cache["ssm"])
+    y = y.reshape(bsz, cfg.d_inner)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rmsnorm(y, p["out_norm"]["scale"])
+    out = dense(y, p["out_proj"], act_bits=act_bits, impl=impl)
+    return out[:, None], {"conv": conv_state, "ssm": ssm_state}
+
+
+def mamba_cache_init(batch: int, cfg: ModelConfig, dtype):
+    s = cfg.ssm
+    conv_ch = cfg.d_inner + 2 * s.n_groups * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_ch), dtype),
+        "ssm": jnp.zeros((batch, cfg.ssm_heads, s.head_dim, s.d_state),
+                         jnp.float32),
+    }

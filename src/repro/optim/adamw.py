@@ -1,0 +1,88 @@
+"""AdamW + schedules, pure jax (no optax dependency in this environment).
+
+State layout mirrors the parameter tree leaf-for-leaf (so parameter
+PartitionSpecs apply verbatim to m/v — the optimizer shards wherever the
+model shards). Updates run in f32 regardless of compute dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"      # cosine | linear | constant
+
+
+def linear_warmup(step, warmup):
+    return jnp.minimum(1.0, (step + 1) / jnp.maximum(warmup, 1))
+
+
+def cosine_schedule(step, cfg: AdamWConfig):
+    warm = linear_warmup(step, cfg.warmup_steps)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    if cfg.schedule == "linear":
+        return cfg.lr * warm * (1.0 - t)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_init(params):
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return {"m": jax.tree_util.tree_map(zeros, params),
+            "v": jax.tree_util.tree_map(zeros, params),
+            "count": jnp.zeros((), jnp.int32)}
+
+
+def adamw_update(grads, state, params, cfg: AdamWConfig):
+    """→ (new_params, new_state, metrics). Grads may be bf16 (compressed
+    collectives); moments and updates are f32."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.where(
+        (cfg.clip_norm is not None) & (gnorm > (cfg.clip_norm or 1.0)),
+        (cfg.clip_norm or 1.0) / jnp.maximum(gnorm, 1e-9), 1.0)
+    lr = cosine_schedule(state["count"], cfg)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * jnp.square(g)
+        mh = m / (1 - cfg.b1 ** count.astype(jnp.float32))
+        vh = v / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step = mh / (jnp.sqrt(vh) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:   # no decay on norms/bias
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m, v
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    flat_p = treedef.flatten_up_to(params)
+    new = [upd(g, m, v, p) for g, m, v, p in
+           zip(flat_g, flat_m, flat_v, flat_p)]
+    new_p = jax.tree_util.tree_unflatten(treedef, [n[0] for n in new])
+    new_m = jax.tree_util.tree_unflatten(treedef, [n[1] for n in new])
+    new_v = jax.tree_util.tree_unflatten(treedef, [n[2] for n in new])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "count": count}, metrics

@@ -1,0 +1,4 @@
+"""Distribution substrate: logical-axis sharding, mesh helpers, gradient
+compression."""
+from .sharding import (DEFAULT_RULES, axis_rules, constrain, current_mesh,
+                       defs_to_pspecs, defs_to_shardings, logical_to_pspec)

@@ -1,0 +1,66 @@
+"""Gradient compression collectives.
+
+A ring all-reduce is reduce-scatter + all-gather. We compress each phase
+independently:
+
+  reduce-scatter in bf16   (accumulation precision: sums of ≤64k bf16 grads
+                            keep ~8 significant bits — standard practice)
+  all-gather   in int8     (per-shard absmax scaling + stochastic rounding)
+
+f32 all-reduce moves 8 B/elem on the wire (4+4); this scheme moves
+2 (RS) + 1 (AG) + ε(scales) = 3 B/elem → 2.7× less collective traffic, the
+§Perf lever for collective-bound training cells. Exposed two ways:
+
+  compressed_allreduce_mean(x, axis)  — inside shard_map/pmap bodies
+  compress_tree_for_sync(grads)       — pjit-friendly: casts grads bf16 so
+                                        XLA's automatic data-parallel
+                                        all-reduces run at half width
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_quantize(x: jax.Array, key=None):
+    """Per-tensor absmax int8 with optional stochastic rounding."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(xf)), 1e-12) / 127.0
+    y = xf / scale
+    if key is not None:
+        y = y + jax.random.uniform(key, y.shape, minval=-0.5, maxval=0.5)
+    return jnp.clip(jnp.round(y), -127, 127).astype(jnp.int8), scale
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compressed_allreduce_mean(x: jax.Array, axis: str,
+                              key=None) -> jax.Array:
+    """Mean over `axis` (named, inside shard_map/pmap) with compressed wire
+    traffic. x must have leading dim divisible by the axis size (pad first).
+    """
+    n = jax.lax.psum(1, axis)
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % n
+    flat = jnp.pad(flat, (0, pad))
+    part = jax.lax.psum_scatter(flat.astype(jnp.bfloat16), axis,
+                                scatter_dimension=0, tiled=True)
+    part = part.astype(jnp.float32) / n
+    q, scale = int8_quantize(part, key)
+    qg = jax.lax.all_gather(q, axis, tiled=True)
+    sg = jax.lax.all_gather(scale, axis).reshape(n)       # one scale/rank
+    shard = qg.shape[0] // n
+    out = (qg.reshape(n, shard).astype(jnp.float32)
+           * sg[:, None]).reshape(-1)
+    out = out[:x.size] if pad else out
+    return out.reshape(x.shape).astype(x.dtype)
+
+
+def compress_tree_for_sync(grads):
+    """pjit path: bf16 gradients halve every automatic data-parallel
+    all-reduce the backward pass emits (checked in the dry-run HLO)."""
+    return jax.tree_util.tree_map(
+        lambda g: g.astype(jnp.bfloat16) if g.dtype == jnp.float32 else g,
+        grads)

@@ -1,0 +1,150 @@
+"""Logical-axis sharding rules (MaxText-style, reduced to what we need).
+
+Every parameter and activation dimension is named with a LOGICAL axis
+("embed", "mlp", "heads", …). A rule table maps logical axes onto PHYSICAL
+mesh axes ("pod", "data", "model"). Rules resolve defensively:
+
+  * physical axes absent from the running mesh are dropped (the same model
+    code lowers on 1-device CPU, a 256-chip pod, or the 512-chip 2-pod mesh);
+  * a dim that does not divide by its mesh axes falls back to replicated
+    (e.g. 8 kv heads on a 16-way model axis).
+
+Profiles (training / decode / long-context) override individual rules —
+long_500k re-maps "kv_seq" onto the data axis so a 524k-token KV cache is
+sequence-sharded.
+"""
+from __future__ import annotations
+
+import contextlib
+import math
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+DEFAULT_RULES: dict = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "kv_seq": None,           # long-context profile remaps → "data"
+    "embed": None,
+    "mlp": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "vocab": "model",
+    "experts": "model",
+    "capacity": None,
+    # parameters
+    "layers": None,
+    "stack": None,            # pattern-position axis of stacked stages
+    "expert_mlp": None,
+    "lora": None,             # MLA latent dims
+    "state": None,            # SSM state / conv dims
+    "conv": None,
+    "inner": "model",         # SSM d_inner projections
+    "fsdp_embed": ("pod", "data"),  # ZeRO-3 profile only (see train/)
+}
+
+LONG_CONTEXT_RULES = dict(DEFAULT_RULES, kv_seq=("model", "data"))
+
+
+class _Active:
+    mesh: Optional[Mesh] = None
+    rules: dict = DEFAULT_RULES
+
+
+_ACTIVE = _Active()
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], rules: Optional[dict] = None):
+    """Activate (mesh, rules) for constrain()/defs_to_* inside the block."""
+    prev = (_ACTIVE.mesh, _ACTIVE.rules)
+    _ACTIVE.mesh = mesh
+    _ACTIVE.rules = dict(DEFAULT_RULES, **(rules or {}))
+    try:
+        yield
+    finally:
+        _ACTIVE.mesh, _ACTIVE.rules = prev
+
+
+def current_mesh() -> Optional[Mesh]:
+    return _ACTIVE.mesh
+
+
+def _resolve(axis_name: Optional[str], dim: int, mesh: Mesh, rules: dict,
+             taken: set):
+    """One logical axis → tuple of usable physical axes (possibly empty)."""
+    rule = rules.get(axis_name) if axis_name else None
+    if rule is None:
+        return ()
+    phys = (rule,) if isinstance(rule, str) else tuple(rule)
+    out = []
+    size = 1
+    for ax in phys:
+        if ax not in mesh.axis_names or ax in taken:
+            continue
+        k = dict(zip(mesh.axis_names, mesh.devices.shape))[ax]
+        if dim % (size * k):
+            continue
+        out.append(ax)
+        size *= k
+    return tuple(out)
+
+
+def logical_to_pspec(axes, shape, mesh: Optional[Mesh] = None,
+                     rules: Optional[dict] = None) -> P:
+    mesh = mesh or _ACTIVE.mesh
+    rules = rules or _ACTIVE.rules
+    if mesh is None:
+        return P()
+    taken: set = set()
+    parts = []
+    for name, dim in zip(axes, shape):
+        phys = _resolve(name, dim, mesh, rules, taken)
+        taken.update(phys)
+        if not phys:
+            parts.append(None)
+        elif len(phys) == 1:
+            parts.append(phys[0])
+        else:
+            parts.append(tuple(phys))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def constrain(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names (no-op off-mesh)."""
+    mesh = _ACTIVE.mesh
+    if mesh is None:
+        return x
+    spec = logical_to_pspec(axes, x.shape, mesh, _ACTIVE.rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def defs_to_pspecs(defs, mesh: Optional[Mesh] = None,
+                   rules: Optional[dict] = None):
+    from ..models.params import ParamDef  # local: avoids import cycle
+    return jax.tree_util.tree_map(
+        lambda d: logical_to_pspec(d.axes, d.shape, mesh, rules),
+        defs, is_leaf=lambda v: isinstance(v, ParamDef))
+
+
+def defs_to_shardings(defs, mesh: Optional[Mesh] = None,
+                      rules: Optional[dict] = None):
+    from ..models.params import ParamDef  # local: avoids import cycle
+    mesh = mesh or _ACTIVE.mesh
+    return jax.tree_util.tree_map(
+        lambda d: NamedSharding(mesh, logical_to_pspec(d.axes, d.shape,
+                                                       mesh, rules)),
+        defs, is_leaf=lambda v: isinstance(v, ParamDef))
+
+
+def tree_shardings_like(tree, defs, mesh: Optional[Mesh] = None,
+                        rules: Optional[dict] = None):
+    """Shardings for a VALUE tree whose structure matches the def tree
+    (e.g. optimizer states replicate the param layout)."""
+    sh = defs_to_shardings(defs, mesh, rules)
+    return jax.tree_util.tree_map(lambda _, s: s, tree, sh)

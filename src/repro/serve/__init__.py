@@ -1,0 +1,3 @@
+from .quantize import quantize_params, quantize_defs, QUANT_LEAF_NAMES
+from .engine import ServeEngine, make_serve_step, cache_pspecs
+from .scheduler import ContinuousBatcher, Request

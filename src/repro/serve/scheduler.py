@@ -1,0 +1,145 @@
+"""Continuous batching: requests of DIFFERENT lengths share the decode batch.
+
+Every scheduler tick is exactly one jitted `decode_step` over all lanes
+(fixed shapes — no recompilation as requests come and go):
+
+  * a lane in PREFILL phase feeds its next prompt token (chunked prefill:
+    the prompt streams through the same decode path, one token per tick,
+    interleaved with other lanes' generation);
+  * a lane in DECODE phase feeds its previously sampled token;
+  * a FREE lane feeds a dummy token at position 0 into a scratch region
+    (its cache slots are re-stamped on admission, so garbage is masked out
+    by the position stamps).
+
+Per-lane positions (models.attention decode paths take pos as a (B,)
+vector) are what make this possible; lane admission is O(1) — no cache
+reshuffling, the ring/stamp semantics invalidate stale entries naturally.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..models.config import ModelConfig
+from ..models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list            # token ids
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+@dataclasses.dataclass
+class _Lane:
+    req: Optional[Request] = None
+    pos: int = 0            # next position to write
+    fed: int = 0            # prompt tokens already fed
+    last_tok: int = 0
+
+    @property
+    def free(self):
+        return self.req is None
+
+
+class ContinuousBatcher:
+    """Fixed-lane continuous batching over a shared jitted decode step."""
+
+    def __init__(self, cfg: ModelConfig, params, max_seq: int = 256,
+                 lanes: int = 4, kv_bits: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.model = Model(cfg, kv_bits=kv_bits)
+        self.lanes = [_Lane() for _ in range(lanes)]
+        self.cache = self.model.init_cache(lanes, max_seq)
+        self._step = jax.jit(self.model.decode_step)
+        self._reset = jax.jit(self._reset_lane)
+        self.queue: List[Request] = []
+        self.finished: List[Request] = []
+        self.ticks = 0
+
+    @staticmethod
+    def _reset_lane(cache, lane):
+        """Invalidate one lane: position stamps → −1 (masks the previous
+        occupant's KV entries), recurrent states → 0. k/v payloads can stay —
+        stamps gate them."""
+        from .engine import _CACHE_AXES
+
+        def walk(tree, path=()):
+            if isinstance(tree, dict):
+                return {k: walk(v, path + (k,)) for k, v in tree.items()}
+            name = path[-1]
+            lead = tree.ndim - len(_CACHE_AXES[name])
+            idx = (slice(None),) * lead + (lane,)
+            if name == "positions":
+                return tree.at[idx].set(-1)
+            if name in ("ssm", "conv"):
+                return tree.at[idx].set(0)
+            return tree
+
+        return walk(cache)
+
+    # -- API -------------------------------------------------------------------
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def run(self, max_ticks: int = 10_000):
+        while (self.queue or any(not l.free for l in self.lanes)):
+            if self.ticks >= max_ticks:
+                break
+            self.tick()
+        return self.finished
+
+    # -- one synchronized step ---------------------------------------------------
+
+    def _admit(self):
+        for i, lane in enumerate(self.lanes):
+            if lane.free and self.queue:
+                req = self.queue.pop(0)
+                lane.req, lane.pos, lane.fed = req, 0, 0
+                lane.last_tok = req.prompt[0]
+                self.cache = self._reset(self.cache, jnp.int32(i))
+
+    def tick(self):
+        self._admit()
+        toks, poss = [], []
+        for lane in self.lanes:
+            if lane.free:
+                toks.append(0)
+                poss.append(self.max_seq - 1)   # scratch slot, masked out
+            elif lane.fed < len(lane.req.prompt):
+                toks.append(lane.req.prompt[lane.fed])   # chunked prefill
+                poss.append(lane.pos)
+            else:
+                toks.append(lane.last_tok)               # decode
+                poss.append(lane.pos)
+        logits, self.cache = self._step(
+            self.params, self.cache,
+            jnp.asarray(toks, jnp.int32), jnp.asarray(poss, jnp.int32))
+        nxt = jax.device_get(jnp.argmax(logits, axis=-1))
+        for i, lane in enumerate(self.lanes):
+            if lane.free:
+                continue
+            lane.pos += 1
+            if lane.fed < len(lane.req.prompt):
+                lane.fed += 1
+                if lane.fed == len(lane.req.prompt):     # prompt done →
+                    lane.last_tok = int(nxt[i])          # first sampled tok
+                    lane.req.out.append(lane.last_tok)
+            else:
+                lane.last_tok = int(nxt[i])
+                lane.req.out.append(lane.last_tok)
+            if (len(lane.req.out) >= lane.req.max_new
+                    or lane.pos >= self.max_seq - 1):
+                lane.req.done = True
+                self.finished.append(lane.req)
+                lane.req = None
+        self.ticks += 1

@@ -1,0 +1,4 @@
+from .checkpoint import (latest_checkpoint, restore_checkpoint,
+                         save_checkpoint)
+from .step import loss_fn, make_train_step
+from .loop import Trainer, TrainerConfig, SimulatedFailure

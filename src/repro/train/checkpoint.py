@@ -1,0 +1,155 @@
+"""Sharded, atomic, elastic checkpoints.
+
+Layout (one directory per step):
+    <dir>/step_00001230.tmp/   — written first
+        manifest.json          — step, leaf paths, shapes, dtypes
+        arrays.npz             — one entry per leaf (path-encoded keys)
+    <dir>/step_00001230/       — atomic rename when complete
+        COMMIT                 — marker written LAST; restores ignore
+                                 directories without it (torn saves are
+                                 invisible)
+
+Trees must be nested dicts with array leaves (our params/opt-state layout).
+`restore_checkpoint(..., shardings=...)` re-places every leaf onto the GIVEN
+mesh/sharding — the target mesh may differ from the one that saved (elastic
+restart onto fewer/more pods); divisibility is re-resolved by the logical
+rules, not recorded in the checkpoint.
+
+Async saves snapshot to host synchronously (jax.device_get — cheap relative
+to a training step) and write in a daemon thread; `wait()` joins before the
+next save or shutdown.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+
+_SEP = "|"  # path separator inside npz keys (keys may contain "/")
+
+
+def _flatten(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            yield from _flatten(tree[k], prefix + (str(k),))
+    else:
+        yield prefix, tree
+
+
+def _unflatten(pairs):
+    root: dict = {}
+    for path, val in pairs:
+        node = root
+        for k in path[:-1]:
+            node = node.setdefault(k, {})
+        node[path[-1]] = val
+    return root
+
+
+class _AsyncSaver:
+    def __init__(self):
+        self._thread: Optional[threading.Thread] = None
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def submit(self, fn):
+        self.wait()
+        self._thread = threading.Thread(target=fn, daemon=True)
+        self._thread.start()
+
+
+_SAVER = _AsyncSaver()
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree, keep: int = 3,
+                    async_: bool = False) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    host_tree = jax.device_get(tree)          # snapshot NOW (donation-safe)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    tmp = final + ".tmp"
+
+    def write():
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = list(_flatten(host_tree))
+        arrays = {_SEP.join(p): np.asarray(v) for p, v in flat}
+        np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+        manifest = {
+            "step": step,
+            "leaves": {_SEP.join(p): {"shape": list(np.shape(v)),
+                                      "dtype": str(np.asarray(v).dtype)}
+                       for p, v in flat},
+        }
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.replace(tmp, final)
+        with open(os.path.join(final, "COMMIT"), "w") as f:
+            f.write("ok\n")
+        _prune(ckpt_dir, keep)
+
+    if async_:
+        _SAVER.submit(write)
+    else:
+        _SAVER.wait()
+        write()
+    return final
+
+
+def wait_for_saves():
+    _SAVER.wait()
+
+
+def _prune(ckpt_dir: str, keep: int):
+    steps = sorted(_committed(ckpt_dir))
+    for s in steps[:-keep]:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                      ignore_errors=True)
+
+
+def _committed(ckpt_dir: str):
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            if os.path.exists(os.path.join(ckpt_dir, name, "COMMIT")):
+                out.append(int(name.split("_")[1]))
+    return out
+
+
+def latest_checkpoint(ckpt_dir: str) -> Optional[str]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = _committed(ckpt_dir)
+    if not steps:
+        return None
+    return os.path.join(ckpt_dir, f"step_{max(steps):08d}")
+
+
+def restore_checkpoint(path: str, shardings=None):
+    """→ (step, tree). `shardings`: matching tree of jax.sharding.Sharding
+    (or None leaves) — enables elastic re-placement onto a different mesh."""
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    pairs = []
+    sh_flat = dict(_flatten(shardings)) if isinstance(shardings, dict) else {}
+    for key in data.files:
+        arr = data[key]
+        want = manifest["leaves"][key]["dtype"]
+        if str(arr.dtype) != want:     # bf16 etc. round-trip as raw bytes
+            arr = arr.view(np.dtype(want))
+        path_t = tuple(key.split(_SEP))
+        sh = sh_flat.get(path_t)
+        pairs.append((path_t, jax.device_put(arr, sh) if sh is not None
+                      else arr))
+    return manifest["step"], _unflatten(pairs)

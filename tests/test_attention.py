@@ -1,0 +1,93 @@
+"""Attention unit tests: flash ≡ direct (windows, softcaps), ring-buffer
+cache semantics, MLA absorbed-decode ≡ expanded-forward."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.models.attention as A
+from repro.models.config import AttnConfig, MLAConfig
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), window=st.sampled_from([None, 8, 24]),
+       cap=st.sampled_from([None, 30.0]), block=st.sampled_from([16, 32, 50]))
+def test_flash_equals_direct(seed, window, cap, block):
+    r = np.random.default_rng(seed)
+    b, s, h, hkv, d = 2, 96, 4, 2, 16
+    q = jnp.asarray(r.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(r.normal(size=(b, s, hkv, d)), jnp.float32)
+    v = jnp.asarray(r.normal(size=(b, s, hkv, d)), jnp.float32)
+    ref = A._sdpa(q, k, v, A._causal_mask(s, s, window), cap, d ** -0.5)
+    out = A._flash_sdpa(q, k, v, window, cap, d ** -0.5, block=block)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_flash_gradients_match(rng):
+    b, s, h, d = 1, 64, 2, 8
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    f_ref = lambda q: A._sdpa(q, k, v, A._causal_mask(s, s, None), None,
+                              d ** -0.5).sum()
+    f_fl = lambda q: A._flash_sdpa(q, k, v, None, None, d ** -0.5,
+                                   block=16).sum()
+    g1, g2 = jax.grad(f_ref)(q), jax.grad(f_fl)(q)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2), rtol=1e-3,
+                               atol=1e-4)
+
+
+def test_ring_cache_evicts_outside_window(rng):
+    """Local layers keep only `window` slots; positions older than the window
+    must be masked out even though their slots are reused."""
+    acfg = AttnConfig(num_heads=2, num_kv_heads=2, head_dim=8)
+    window = 4
+    p = {"wq": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32),
+         "wk": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32),
+         "wv": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32),
+         "wo": jnp.asarray(rng.normal(size=(16, 16)), jnp.float32)}
+    cache = A.gqa_cache_init(1, window, acfg, jnp.float32)
+    xs = jnp.asarray(rng.normal(size=(10, 1, 1, 16)), jnp.float32)
+    for t in range(10):
+        out, cache = A.gqa_decode(xs[t], p, acfg, window, cache,
+                                  jnp.int32(t))
+    # after 10 steps the cache holds positions 6..9 only (per lane)
+    assert sorted(np.asarray(cache["positions"][0]).tolist()) == [6, 7, 8, 9]
+    # full-sequence forward with the same window agrees at the last step
+    full = A.gqa_forward(xs.reshape(1, 10, 16).astype(jnp.float32), p, acfg,
+                         window, jnp.arange(10))
+    np.testing.assert_allclose(np.asarray(out[:, 0]),
+                               np.asarray(full[:, -1]), rtol=1e-4, atol=1e-4)
+
+
+def test_mla_absorbed_decode_equals_expanded_forward(rng):
+    acfg = AttnConfig(num_heads=4, num_kv_heads=4, head_dim=16)
+    mla = MLAConfig(kv_lora_rank=24, qk_nope_head_dim=16, qk_rope_head_dim=8,
+                    v_head_dim=16)
+    e, h = 32, 4
+    p = {"wq": jnp.asarray(rng.normal(size=(e, h * 24)) * 0.1, jnp.float32),
+         "w_dkv": jnp.asarray(rng.normal(size=(e, 32)) * 0.1, jnp.float32),
+         "kv_norm": {"scale": jnp.zeros((24,), jnp.float32)},
+         "w_uk": jnp.asarray(rng.normal(size=(24, h * 16)) * 0.1, jnp.float32),
+         "w_uv": jnp.asarray(rng.normal(size=(24, h * 16)) * 0.1, jnp.float32),
+         "wo": jnp.asarray(rng.normal(size=(h * 16, e)) * 0.1, jnp.float32)}
+    s = 12
+    x = jnp.asarray(rng.normal(size=(2, s, e)), jnp.float32)
+    full = A.mla_forward(x, p, acfg, mla, jnp.arange(s))
+    cache = A.mla_cache_init(2, s, mla, jnp.float32)
+    for t in range(s):
+        out, cache = A.mla_decode(x[:, t:t + 1], p, acfg, mla, cache,
+                                  jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(out[:, 0]),
+                                   np.asarray(full[:, t]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_softcap_bounds_scores():
+    from repro.models.layers import softcap
+    x = jnp.linspace(-1000, 1000, 101)
+    y = softcap(x, 50.0)
+    assert float(jnp.abs(y).max()) <= 50.0
+    np.testing.assert_allclose(np.asarray(softcap(x, None)), np.asarray(x))

@@ -1,0 +1,46 @@
+"""Engine pricing: the calibrated DDR4 model must reproduce the paper's
+measured anchors (Fig. 12/13/14) within tolerance, and preserve the paper's
+qualitative claims (speedup grows with size, conventional PUD pays
+pre-arrange + transposition)."""
+import numpy as np
+import pytest
+
+from repro.core.pud.timing import compare_gemv
+
+
+def test_anchor_fig12_q2p1():
+    r = compare_gemv(32000, 4096, q=2, p=1, bit_density=0.5)
+    assert abs(r["mvdram_compute_ms"] - 0.14) < 0.02      # paper: 0.14 ms
+    assert abs(r["mvdram_aggregate_ms"] - 0.05) < 0.01    # paper: 0.05 ms
+    assert abs(r["cpu_ms"] - 1.44) < 0.05                 # paper: 1.44 ms
+    assert abs(r["gpu_ms"] - 1.70) < 0.10                 # paper: 1.70 ms
+    assert 6.5 < r["speedup_vs_cpu"] < 8.2                # paper: 7.29×
+    assert 27.0 < r["energy_ratio_vs_cpu"] < 33.5         # paper: 30.5×
+    assert 8.0 < r["energy_ratio_vs_gpu"] < 9.7           # paper: 8.87×
+
+
+def test_fig13_speedup_grows_with_size():
+    sizes = [2048, 8192, 32768]
+    sp = [compare_gemv(m, m, q=2, p=4)["speedup_vs_cpu"] for m in sizes]
+    assert sp[0] < sp[1] < sp[2]
+    r = compare_gemv(32768, 32768, q=2, p=4)
+    assert 2.0 < r["speedup_vs_cpu"] < 4.5                # paper: 3.38×
+
+
+def test_conventional_pud_slower_than_mvdram():
+    for q in (2, 4, 8):
+        r = compare_gemv(32000, 4096, q=q, p=4)
+        assert r["conventional_pud_ms"] > r["mvdram_ms"]
+        assert r["conventional_prearrange_ms"] > 0
+
+
+def test_sparsity_speedup_monotone():
+    dense = compare_gemv(32000, 4096, q=2, p=4, bit_density=0.9)
+    sparse = compare_gemv(32000, 4096, q=2, p=4, bit_density=0.2)
+    assert sparse["mvdram_ms"] < dense["mvdram_ms"]
+
+
+def test_latency_scales_with_weight_bits():
+    t = [compare_gemv(32000, 4096, q=q, p=4)["mvdram_ms"]
+         for q in (2, 4, 8)]
+    assert t[0] <= t[1] <= t[2]

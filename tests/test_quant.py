@@ -1,0 +1,69 @@
+"""Quantization substrate: roundtrip error bounds, zero-point algebra,
+code packing — including hypothesis properties."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quant import (QuantSpec, dequantize_activations,
+                              dequantize_weights, fake_quant, pack_codes,
+                              quantize_activations, quantize_weights,
+                              quantized_gemv_reference, unpack_codes)
+
+
+@pytest.mark.parametrize("bits", [2, 3, 4, 8])
+@pytest.mark.parametrize("group", [-1, 16])
+def test_weight_roundtrip_error_bound(rng, bits, group):
+    w = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    qt = quantize_weights(w, QuantSpec(bits=bits, group_size=group))
+    wd = dequantize_weights(qt)
+    # max error ≤ half a quantization step per group
+    g = qt.scale.shape[0]
+    step = np.asarray(qt.scale).repeat(64 // g, axis=0)
+    assert np.all(np.abs(np.asarray(wd - w)) <= step * 0.5 + 1e-6)
+
+
+def test_codes_in_range(rng):
+    for bits in (1, 2, 3, 4, 8):
+        w = jnp.asarray(rng.normal(size=(32, 4)), jnp.float32)
+        qt = quantize_weights(w, QuantSpec(bits=bits))
+        v = np.asarray(qt.values)
+        assert v.min() >= 0 and v.max() < 2 ** bits
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits_w=st.integers(2, 8), bits_a=st.integers(2, 8),
+       n=st.sampled_from([16, 32, 48]), m=st.integers(1, 8),
+       seed=st.integers(0, 2 ** 16))
+def test_integer_gemv_equals_dequant_gemv(bits_w, bits_a, n, m, seed):
+    """The zero-point-corrected integer GeMV must equal the float GeMV on
+    dequantized operands — the algebra MVDRAM relies on (paper §II-C2)."""
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.normal(size=(n, m)), jnp.float32)
+    a = jnp.asarray(r.normal(size=(n,)), jnp.float32)
+    wq = quantize_weights(w, QuantSpec(bits=bits_w))
+    aq = quantize_activations(a, QuantSpec(bits=bits_a))
+    ref = dequantize_activations(aq) @ dequantize_weights(wq)
+    out = quantized_gemv_reference(aq, wq)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(bits=st.sampled_from([2, 4, 8]), n=st.sampled_from([8, 16, 64]),
+       seed=st.integers(0, 2 ** 16))
+def test_pack_unpack_codes_inverse(bits, n, seed):
+    r = np.random.default_rng(seed)
+    v = jnp.asarray(r.integers(0, 2 ** bits, size=(3, n)), jnp.uint8)
+    packed = pack_codes(v, bits)
+    back = unpack_codes(packed, bits, n)
+    assert (np.asarray(back) == np.asarray(v)).all()
+
+
+def test_fake_quant_straight_through(rng):
+    import jax
+    w = jnp.asarray(rng.normal(size=(32, 8)), jnp.float32)
+    g = jax.grad(lambda x: fake_quant(x, 4, -1).sum())(w)
+    assert np.allclose(np.asarray(g), 1.0)          # STE passes grads
+    wq = fake_quant(w, 8, -1)
+    assert float(jnp.abs(wq - w).max()) < 0.05      # 8-bit is near-lossless

@@ -1,0 +1,104 @@
+"""Serving: quantize transform structure, engine generation, dense-vs-
+quantized agreement at 8 bits, serving-bytes accounting."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import tiny_config
+from repro.core.bitplane import BitplaneWeights
+from repro.models.model import Model, param_defs
+from repro.models.params import init_params
+from repro.serve.engine import ServeEngine
+from repro.serve.quantize import (QUANT_LEAF_NAMES, quantize_defs,
+                                  quantize_params, serving_bytes)
+
+KEY = jax.random.PRNGKey(0)
+
+
+def test_quantize_params_swaps_expected_leaves():
+    cfg = tiny_config("llama2-7b")
+    params = init_params(param_defs(cfg), KEY)
+    pq = quantize_params(params, bits=4)
+    stage = pq["stages"]["0"]
+    assert isinstance(stage["attn"]["wq"], BitplaneWeights)
+    assert isinstance(stage["ffn"]["down"], BitplaneWeights)
+    assert isinstance(pq["lm_head"], BitplaneWeights)
+    # norms / embeddings untouched
+    assert not isinstance(stage["ln1"]["scale"], BitplaneWeights)
+    assert not isinstance(pq["embed"], BitplaneWeights)
+    # stacked leaves keep the stack dim on the packed planes
+    assert stage["attn"]["wq"].planes.shape[0] == params["stages"]["0"][
+        "attn"]["wq"].shape[0]
+
+
+def test_quantize_defs_matches_quantize_params_structure():
+    cfg = tiny_config("qwen2-7b")
+    defs = param_defs(cfg)
+    params = init_params(defs, KEY)
+    pq = quantize_params(params, bits=3)
+    dq = quantize_defs(defs, bits=3)
+    t1 = jax.tree_util.tree_structure(pq)
+    t2 = jax.tree_util.tree_structure(dq)
+    assert t1 == t2
+    for a, b in zip(jax.tree_util.tree_leaves(pq),
+                    jax.tree_util.tree_leaves(dq)):
+        assert a.shape == b.shape, (a.shape, b.shape)
+        assert a.dtype == b.dtype
+
+
+def test_generate_dense_vs_quantized_8bit():
+    cfg = dataclasses.replace(tiny_config("llama2-7b"), dtype="float32",
+                              weight_bits=8)
+    params = init_params(param_defs(cfg), KEY)
+    prompts = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size,
+                                 dtype=jnp.int32)
+    e_dense = ServeEngine(cfg, params, max_seq=32, quantized=False)
+    e_quant = ServeEngine(cfg, params, max_seq=32, quantized=True)
+    t_dense = e_dense.generate(prompts, max_new=8)
+    t_quant = e_quant.generate(prompts, max_new=8)
+    assert t_dense.shape == t_quant.shape == (2, 16)
+    # 8-bit quantization: greedy decode diverges rarely on 8 tokens
+    agree = float((t_dense == t_quant).mean())
+    assert agree > 0.8, agree
+
+
+def test_serving_bytes_capacity_win():
+    from repro.configs import get_config
+    cfg = get_config("llama2-7b")          # 2-bit serving point
+    rep = serving_bytes(param_defs(cfg), cfg.weight_bits)
+    assert rep["ratio"] > 4.0              # ~bf16/2-bit on linear-dominated
+    rep4 = serving_bytes(param_defs(cfg), 4)
+    assert rep4["ratio"] < rep["ratio"]
+
+
+def test_temperature_sampling_shape():
+    cfg = tiny_config("llama2-7b")
+    params = init_params(param_defs(cfg), KEY)
+    eng = ServeEngine(cfg, params, max_seq=24)
+    out = eng.generate(jnp.zeros((1, 4), jnp.int32), max_new=4,
+                       temperature=1.0, seed=7)
+    assert out.shape == (1, 8)
+    assert (np.asarray(out) >= 0).all()
+    assert (np.asarray(out) < cfg.vocab_size).all()
+
+
+def test_moe_experts_served_bitplane():
+    """Routed experts swap to E-stacked bit-planes and the quantized model
+    tracks the dense one at 8 bits (paper's per-expert GeMV case)."""
+    cfg = dataclasses.replace(tiny_config("qwen2-moe-a2.7b"),
+                              dtype="float32", weight_bits=8)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    params = init_params(param_defs(cfg), KEY)
+    batch = {"tokens": jax.random.randint(KEY, (2, 12), 0, cfg.vocab_size)}
+    ref, _ = jax.jit(Model(cfg).forward)(params, batch)
+    pq = quantize_params(params, bits=8)
+    assert isinstance(pq["stages"]["0"]["moe"]["w_up"], BitplaneWeights)
+    assert not isinstance(pq["stages"]["0"]["moe"]["router"],
+                          BitplaneWeights)  # router stays fp
+    out, _ = jax.jit(Model(cfg).forward)(pq, batch)
+    rel = float(jnp.abs(out - ref).max() / (jnp.abs(ref).max() + 1e-9))
+    assert rel < 0.05, rel

@@ -1,0 +1,77 @@
+"""Logical-axis resolution rules (single-device — pure spec logic)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.models.params import ParamDef
+from repro.parallel.sharding import (DEFAULT_RULES, LONG_CONTEXT_RULES,
+                                     axis_rules, defs_to_pspecs,
+                                     logical_to_pspec)
+
+
+class FakeMesh:
+    """Duck-typed mesh: only axis_names + devices.shape are consulted."""
+
+    def __init__(self, shape, names):
+        self.axis_names = names
+        self.devices = np.empty(shape)
+
+
+MESH_1POD = FakeMesh((16, 16), ("data", "model"))
+MESH_2POD = FakeMesh((2, 16, 16), ("pod", "data", "model"))
+
+
+def test_basic_resolution():
+    spec = logical_to_pspec(("embed", "mlp"), (4096, 16384), MESH_1POD,
+                            DEFAULT_RULES)
+    assert spec == P(None, "model")
+
+
+def test_pod_axis_dropped_on_single_pod():
+    spec = logical_to_pspec(("batch", "seq"), (256, 4096), MESH_1POD,
+                            DEFAULT_RULES)
+    assert spec == P("data")          # ("pod","data") → pod absent
+    spec2 = logical_to_pspec(("batch", "seq"), (256, 4096), MESH_2POD,
+                             DEFAULT_RULES)
+    assert spec2 == P(("pod", "data"))
+
+
+def test_indivisible_dim_falls_back_replicated():
+    # 8 kv heads can't split 16 ways → replicated
+    spec = logical_to_pspec(("kv_heads",), (8,), MESH_1POD, DEFAULT_RULES)
+    assert spec == P()
+    # batch=1 (long_500k) can't shard anywhere
+    spec = logical_to_pspec(("batch",), (1,), MESH_2POD, DEFAULT_RULES)
+    assert spec == P()
+
+
+def test_taken_axis_not_reused():
+    # both dims want "model": second falls back
+    spec = logical_to_pspec(("mlp", "vocab"), (16384, 256000), MESH_1POD,
+                            DEFAULT_RULES)
+    assert spec == P("model")
+
+
+def test_partial_multi_axis():
+    # kv_seq → ("model","data"): 524288 divides by both → 2-axis sharding
+    spec = logical_to_pspec(("batch", "kv_seq"), (1, 524288), MESH_1POD,
+                            LONG_CONTEXT_RULES)
+    assert spec == P(None, ("model", "data"))
+
+
+def test_defs_to_pspecs_tree():
+    defs = {"w": ParamDef((1024, 4096), ("embed", "mlp")),
+            "b": {"scale": ParamDef((1024,), ("embed",))}}
+    specs = defs_to_pspecs(defs, MESH_1POD, DEFAULT_RULES)
+    assert specs["w"] == P(None, "model")
+    assert specs["b"]["scale"] == P()
+
+
+def test_axis_rules_context_isolation():
+    with axis_rules(None, {"embed": "model"}):
+        pass  # no mesh: constrain() must be a no-op and not raise
+    import jax.numpy as jnp
+    from repro.parallel.sharding import constrain
+    x = jnp.ones((4, 4))
+    assert constrain(x, "batch", "embed") is x

@@ -18,8 +18,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from . import kernel_bench, paper_figs, roofline_table
-    benches = paper_figs.ALL + kernel_bench.ALL + roofline_table.ALL
+    from . import kernel_bench, paper_figs, roofline_table, sim_bench
+    benches = (paper_figs.ALL + kernel_bench.ALL + sim_bench.ALL
+               + roofline_table.ALL)
 
     print("name,value,derived")
 

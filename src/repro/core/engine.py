@@ -31,9 +31,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from .bitplane import (BitplaneWeights, bitplane_gemv_bitserial,
-                       bitplane_gemv_f32, make_bitplane_weights)
-from .pud.gemv import (GemvCost, PudGeometry, conventional_pud_cost,
-                       mvdram_gemv, mvdram_gemv_cost)
+                       bitplane_gemv_f32, from_quantized)
+from .pud.gemv import (CommandTemplates, GemvCost, PudGeometry,
+                       build_templates, conventional_pud_cost, mvdram_gemv,
+                       mvdram_gemv_cost)
 from .pud.timing import (DDR4_2400, CpuBaseline, DDR4Model, GpuBaseline,
                          PudCost, price_gemv)
 from .quant import (QuantSpec, QuantizedTensor, quantize_activations,
@@ -82,13 +83,20 @@ def make_plan(m: int, n: int, q: int, p: int,
 
 @dataclasses.dataclass
 class GemvHandle:
-    """A weight matrix registered with the engine (resident "in DRAM")."""
+    """A weight matrix registered with the engine (resident "in DRAM").
+
+    `templates` are the static per-bit-offset command templates (§V-C) for
+    this matrix's tile shape, precomputed at registration so per-inference
+    work is popcount selection only (§V-D). None for float activations —
+    there is no bit-serial command stream to template.
+    """
 
     name: str
     weights: BitplaneWeights
     wq: QuantizedTensor
     plan: PartitionPlan
     a_spec: Optional[QuantSpec]  # None => float activations (w-bit / a-fp)
+    templates: Optional[CommandTemplates] = None
 
 
 class MVDRAMEngine:
@@ -110,20 +118,29 @@ class MVDRAMEngine:
 
     def register(self, name: str, w: jax.Array, w_spec: QuantSpec,
                  a_spec: Optional[QuantSpec] = None) -> GemvHandle:
-        """Quantize + pack an (N, M) weight matrix; build the partition plan."""
+        """Quantize + pack an (N, M) weight matrix; build the partition plan
+        and the static command templates (quantize ONCE — the packed planes
+        are derived from the same codes the simulator executes on)."""
         wq = quantize_weights(w, w_spec)
-        bw = make_bitplane_weights(w, w_spec)
+        bw = from_quantized(wq)
         p = a_spec.bits if a_spec is not None else 16
         plan = make_plan(m=w.shape[1], n=w.shape[0], q=w_spec.bits, p=p,
                          geom=self.geom)
-        h = GemvHandle(name=name, weights=bw, wq=wq, plan=plan, a_spec=a_spec)
+        templates = (build_templates(plan.n_sub, p)
+                     if a_spec is not None else None)
+        h = GemvHandle(name=name, weights=bw, wq=wq, plan=plan, a_spec=a_spec,
+                       templates=templates)
         self.handles[name] = h
         return h
 
     # -- steps ②–④: encode, execute, aggregate -------------------------------
 
     def gemv(self, handle: GemvHandle | str, a: jax.Array,
-             mode: str = "jnp"):
+             mode: str = "jnp", fidelity: str = "code",
+             naive: bool = False):
+        """`fidelity` selects the Pallas bit-serial schedule ("code" = q dots
+        via the §V-D linearity collapse, "bitserial" = decomposed q·p);
+        `naive=True` runs the sim micro-op by micro-op (the oracle)."""
         h = self.handles[handle] if isinstance(handle, str) else handle
         if mode == "jnp":
             if h.a_spec is None:
@@ -137,14 +154,16 @@ class MVDRAMEngine:
             if h.a_spec is None:
                 return bp_ops.bitplane_gemv(a, h.weights, impl=impl)
             return bp_ops.bitplane_gemv_bitserial(a, h.weights, h.a_spec,
-                                                  impl=impl)
+                                                  impl=impl,
+                                                  fidelity=fidelity)
         if mode == "sim":
             if h.a_spec is None:
                 raise ValueError("PUD simulation needs quantized activations")
             assert a.ndim == 1, "sim backend is GeMV-only"
             aq = quantize_activations(a, h.a_spec)
             out, report = mvdram_gemv(aq, h.wq, sparsity=self.sparsity,
-                                      geom=self.geom)
+                                      geom=self.geom, naive=naive,
+                                      templates=h.templates)
             return jnp.asarray(out), report
         raise ValueError(f"unknown mode {mode!r}")
 

@@ -8,6 +8,8 @@
 """
 from .device import Subarray, OpCounts
 from .layout import HorizontalLayout, horizontal_capacity_report
-from .gemv import mvdram_gemv, mvdram_gemv_subarray, conventional_pud_cost
+from .gemv import (CommandTemplates, TemplatePlan, build_templates,
+                   conventional_pud_cost, mvdram_gemv, mvdram_gemv_subarray,
+                   select_templates)
 from .timing import (DDR4Model, CpuBaseline, GpuBaseline, PudCost,
                      TPU_V5E, DDR4_2400)

@@ -13,10 +13,22 @@ and the complement track uses the self-duality of majority:
 MAJX destroys its inputs (all activated rows are overwritten with the
 result), so operands are first RowCopied into scratch rows; the scratch rows
 then hold the result, which is RowCopied to its destination.
+
+Two execution granularities share the same command accounting:
+
+  `add_row_at_offset`   one add, micro-op by micro-op (the naive oracle —
+                        every RowCopy/MAJX touches the bit array).
+  `add_rows_batched`    ALL adds sharing one bit offset as a single
+                        vectorized ripple-carry over an (n_adds, cols)
+                        operand block; commands are charged analytically
+                        (`adder_cost` per add), so OpCounts and the final
+                        accumulator state are identical to the naive path.
 """
 from __future__ import annotations
 
-from .device import Subarray
+import numpy as np
+
+from .device import OpCounts, Subarray
 from .layout import HorizontalLayout
 
 
@@ -93,3 +105,58 @@ def clear_accumulator(sub: Subarray, lay: HorizontalLayout) -> None:
     for b in range(lay.r):
         sub.row_copy(lay.zero_row, lay.acc_rows[b])
         sub.row_copy(lay.one_row, lay.acc_c_rows[b])
+
+
+def adder_cost(chain_len: int) -> OpCounts:
+    """Op count of one `add_row_at_offset` with the given ripple length.
+
+    Per bit 22 RowCopy + 2 MAJ3 + 2 MAJ5; +2 RowCopy carry-track
+    initialization. This IS the static command template for one add —
+    the stream depends only on (offset, chain_len), never on in-DRAM data.
+    """
+    return OpCounts(row_copy=22 * chain_len + 2, maj3=2 * chain_len,
+                    maj5=2 * chain_len)
+
+
+def add_rows_batched(sub: Subarray, lay: HorizontalLayout,
+                     matrix_js: np.ndarray, offset: int,
+                     n_zero_adds: int = 0) -> None:
+    """Accumulator += Σ_j (matrix row j) << offset, all j at once.
+
+    Modular addition is associative, so issuing `add_row_at_offset` once per
+    j (each a full ripple over chain_len = r - offset bits, i.e. addition
+    mod 2^r above bit `offset`) leaves the accumulator at exactly
+        acc' = (acc + Σ_j row_j << offset) mod 2^r.
+    We gather the (n_adds, cols) operand block, reduce it in one numpy op,
+    and write the new accumulator bits (+ complements) back.
+
+    Commands are charged per add via `adder_cost(chain_len)` — the same
+    static template the naive path executes — so OpCounts match the naive
+    oracle exactly. `n_zero_adds` bills the conventional (sparsity-off)
+    zero-row adds, which cost commands but cannot change the value.
+
+    On non-reliable columns MAJX results are untrusted; the naive path
+    leaves column-dependent garbage there, this path leaves the pre-add
+    bits. Neither is ever read out (outputs are placed on reliable runs).
+    """
+    matrix_js = np.asarray(matrix_js, dtype=np.int64)
+    chain_len = lay.r - offset
+    if matrix_js.size:
+        rows = sub.data[np.asarray(lay.matrix_rows)[matrix_js]]
+        addend = rows.astype(np.int64).sum(axis=0) << offset   # (cols,)
+        acc_idx = np.asarray(lay.acc_rows)
+        acc_c_idx = np.asarray(lay.acc_c_rows)
+        weights = (1 << np.arange(lay.r, dtype=np.int64))[:, None]
+        acc_val = (sub.data[acc_idx].astype(np.int64) * weights).sum(axis=0)
+        total = (acc_val + addend) & ((1 << lay.r) - 1)
+        new_bits = ((total[None, :] >> np.arange(lay.r)[:, None]) & 1
+                    ).astype(np.uint8)
+        rel = sub.reliable[None, :]
+        sub.data[acc_idx] = np.where(rel, new_bits, sub.data[acc_idx])
+        sub.data[acc_c_idx] = np.where(rel, 1 - new_bits, sub.data[acc_c_idx])
+    n_adds = int(matrix_js.size) + n_zero_adds
+    if n_adds:
+        per_add = adder_cost(chain_len)
+        sub.counts.row_copy += per_add.row_copy * n_adds
+        sub.counts.maj3 += per_add.maj3 * n_adds
+        sub.counts.maj5 += per_add.maj5 * n_adds

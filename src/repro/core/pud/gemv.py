@@ -23,19 +23,35 @@ q weight bits, p activation bits):
 Integer partial sums from all tiles are aggregated on the host with the
 zero-point correction of `core.quant.quantized_gemv_reference`; the two paths
 are bit-identical (tested).
+
+Template architecture (paper §V-C/§V-D): the command stream for one add at
+bit offset k is STATIC — it depends only on (offset, chain length r−k),
+never on in-DRAM data or activation values. `build_templates(n_sub, p)`
+therefore precomputes one `BitOffsetTemplate` per offset, once per tile
+shape (process-wide LRU cache; `engine.GemvHandle` carries the instance for
+its registered matrix). Per inference the processor only SELECTS templates:
+`select_templates` extracts the activation bit-planes in one vectorized
+numpy pass and records, per offset, which matrix rows participate (the
+popcount selection of §V-D). Execution then runs one batched ripple-carry
+per offset (`adder.add_rows_batched`) instead of one Python-level add per
+set bit. The micro-op-by-micro-op path is retained behind `naive=True` as
+the bit-exact oracle: outputs AND OpCounts are identical (tested).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Optional
 
 import numpy as np
 
 from ..quant import QuantizedTensor
-from .adder import add_row_at_offset, clear_accumulator
+from .adder import (add_row_at_offset, add_rows_batched, adder_cost,
+                    clear_accumulator)
 from .device import OpCounts, Subarray
-from .layout import HorizontalLayout, VerticalLayout
+from .layout import (HorizontalLayout, VerticalLayout,
+                     accumulator_width)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -79,24 +95,109 @@ class CommandPlan:
     p: int
 
 
+def _activation_bits(a_codes: np.ndarray, p: int) -> np.ndarray:
+    """(n,) uint codes → (n, p) boolean bit matrix, one vectorized pass."""
+    a = np.asarray(a_codes).astype(np.uint32)
+    return ((a[:, None] >> np.arange(p, dtype=np.uint32)) & 1).astype(bool)
+
+
 def encode_commands(a_codes: np.ndarray, p: int,
                     sparsity: bool = True) -> CommandPlan:
     """Scan activation codes bit-serially → add schedule (paper §V-C).
 
-    O(N·p) host work; with `sparsity`, zero bits are skipped entirely
-    (template selection by popcount in the real system, §V-D).
+    O(N·p) host work, done as one vectorized bit extraction; with
+    `sparsity`, zero bits are skipped entirely (template selection by
+    popcount in the real system, §V-D). Add order is j-major, k-minor —
+    the same order the naive scan emitted.
     """
-    a = np.asarray(a_codes).astype(np.uint32)
-    adds, skipped = [], 0
-    for j in range(a.shape[0]):
-        for k in range(p):
-            if (a[j] >> k) & 1:
-                adds.append((j, k))
-            elif sparsity:
-                skipped += 1
-            else:
-                adds.append((None, k))  # conventional: add the zero row
-    return CommandPlan(adds=adds, skipped=skipped, n=a.shape[0], p=p)
+    bits = _activation_bits(a_codes, p)
+    n = bits.shape[0]
+    if sparsity:
+        js, ks = np.nonzero(bits)           # row-major ⇒ j-major, k-minor
+        adds = list(zip(js.tolist(), ks.tolist()))
+        return CommandPlan(adds=adds, skipped=n * p - len(adds), n=n, p=p)
+    js = np.repeat(np.arange(n), p).tolist()
+    ks = np.tile(np.arange(p), n).tolist()
+    mask = bits.ravel().tolist()
+    adds = [(j if set_ else None, k) for j, k, set_ in zip(js, ks, mask)]
+    return CommandPlan(adds=adds, skipped=0, n=n, p=p)
+
+
+# ---------------------------------------------------------------------------
+# Static command templates (paper §V-C) + popcount selection (§V-D)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BitOffsetTemplate:
+    """Static command skeleton for any add at bit offset k.
+
+    The stream is data-independent: chain_len = r − k ripple steps, each a
+    fixed RowCopy/MAJ3/MAJ5 sequence (`adder.adder_cost`). Only the matrix
+    row address is patched in at issue time.
+    """
+
+    offset: int
+    chain_len: int
+    cost: OpCounts              # per-add command cost
+
+
+@dataclasses.dataclass(frozen=True)
+class CommandTemplates:
+    """Per-bit-offset templates for one (n_sub, p) tile shape.
+
+    Built once per shape and cached process-wide (`build_templates`);
+    `engine.GemvHandle` holds the instance for its registered matrix so no
+    per-inference work rebuilds command streams.
+    """
+
+    n_sub: int
+    p: int
+    r: int
+    offsets: tuple              # (p,) BitOffsetTemplate
+
+
+@functools.lru_cache(maxsize=None)
+def build_templates(n_sub: int, p: int) -> CommandTemplates:
+    r = accumulator_width(n_sub, p)
+    offs = tuple(BitOffsetTemplate(offset=k, chain_len=r - k,
+                                   cost=adder_cost(r - k))
+                 for k in range(p))
+    return CommandTemplates(n_sub=n_sub, p=p, r=r, offsets=offs)
+
+
+@dataclasses.dataclass
+class TemplatePlan:
+    """Popcount-selected instantiation of the templates for one activation
+    vector — the only data-dependent state built per inference.
+
+    rows_per_offset[k]: matrix-row indices j whose activation bit k is set
+                        (template k is issued once per entry).
+    zero_slots[k]:      zero-bit count at offset k — skipped under
+                        `sparsity`, issued as zero-row adds otherwise.
+    """
+
+    templates: CommandTemplates
+    rows_per_offset: tuple
+    zero_slots: tuple
+    sparsity: bool
+
+    @property
+    def skipped(self) -> int:
+        return int(sum(self.zero_slots)) if self.sparsity else 0
+
+    @property
+    def popcounts(self) -> tuple:
+        return tuple(len(r) for r in self.rows_per_offset)
+
+
+def select_templates(a_codes: np.ndarray, templates: CommandTemplates,
+                     sparsity: bool = True) -> TemplatePlan:
+    """Vectorized §V-D selection: one bit extraction + p nonzero scans."""
+    bits = _activation_bits(a_codes, templates.p)
+    rows = tuple(np.nonzero(bits[:, k])[0] for k in range(templates.p))
+    zeros = tuple(int(bits.shape[0] - r.shape[0]) for r in rows)
+    return TemplatePlan(templates=templates, rows_per_offset=rows,
+                        zero_slots=zeros, sparsity=sparsity)
 
 
 # ---------------------------------------------------------------------------
@@ -114,18 +215,18 @@ def load_matrix(sub: Subarray, lay: HorizontalLayout,
     cols = sub.cols
     sub.host_write_row(lay.zero_row, np.zeros(cols, np.uint8))
     sub.host_write_row(lay.one_row, np.ones(cols, np.uint8))
+    rows = np.zeros((n_sub, cols), np.uint8)
+    w = w_codes.astype(np.uint32)
+    for i in range(lay.q):
+        rows[:, col_base + np.arange(m_sub) * lay.q + i] = (w >> i) & 1
     for j in range(n_sub):
-        row = np.zeros(cols, np.uint8)
-        for i in range(lay.q):
-            bits = (w_codes[j].astype(np.uint32) >> i) & 1
-            row[col_base + np.arange(m_sub) * lay.q + i] = bits
-        sub.host_write_row(lay.matrix_rows[j], row)
-        sub.host_write_row(lay.inv_matrix_rows[j], 1 - row)
+        sub.host_write_row(lay.matrix_rows[j], rows[j])
+        sub.host_write_row(lay.inv_matrix_rows[j], 1 - rows[j])
 
 
 def execute_plan(sub: Subarray, lay: HorizontalLayout,
                  plan: CommandPlan) -> None:
-    """Issue the encoded command stream (the in-DRAM compute phase)."""
+    """Issue the encoded command stream micro-op by micro-op (naive oracle)."""
     clear_accumulator(sub, lay)
     for j, k in plan.adds:
         if j is None:  # conventional zero-add (sparsity disabled)
@@ -135,6 +236,21 @@ def execute_plan(sub: Subarray, lay: HorizontalLayout,
             add_row_at_offset(sub, lay, lay.matrix_rows[j],
                               lay.inv_matrix_rows[j],
                               offset=k, chain_len=lay.r - k)
+
+
+def execute_plan_templated(sub: Subarray, lay: HorizontalLayout,
+                           tplan: TemplatePlan) -> None:
+    """Vectorized compute phase: one batched ripple-carry per bit offset.
+
+    Bit-identical accumulator state and identical OpCounts vs
+    `execute_plan` on the same activation vector (tested equivalence).
+    """
+    assert tplan.templates.r == lay.r, "template/layout accumulator mismatch"
+    clear_accumulator(sub, lay)
+    for k, tmpl in enumerate(tplan.templates.offsets):
+        add_rows_batched(sub, lay, tplan.rows_per_offset[k], offset=k,
+                         n_zero_adds=(0 if tplan.sparsity
+                                      else tplan.zero_slots[k]))
 
 
 def read_outputs(sub: Subarray, lay: HorizontalLayout, m_sub: int,
@@ -155,13 +271,35 @@ def read_outputs(sub: Subarray, lay: HorizontalLayout, m_sub: int,
     return out
 
 
+def _plan_for(a_codes: np.ndarray, n_sub: int, p: int, sparsity: bool,
+              naive: bool):
+    """Build the per-chunk execution plan once (shared by all column tiles)."""
+    if naive:
+        return encode_commands(a_codes, p, sparsity)
+    return select_templates(a_codes, build_templates(n_sub, p), sparsity)
+
+
+def _run_plan(sub: Subarray, lay: HorizontalLayout, plan) -> None:
+    if isinstance(plan, TemplatePlan):
+        execute_plan_templated(sub, lay, plan)
+    else:
+        execute_plan(sub, lay, plan)
+
+
 def mvdram_gemv_subarray(w_codes: np.ndarray, a_codes: np.ndarray,
                          q: int, p: int, sparsity: bool = True,
                          geom: PudGeometry = PudGeometry(),
                          reliable_cols: Optional[np.ndarray] = None,
-                         col_base: int = 0):
+                         col_base: int = 0, naive: bool = False,
+                         plan=None):
     """One-tile MVDRAM GeMV: returns (partials int64 (m,), runtime OpCounts,
-    preload OpCounts, Subarray)."""
+    preload OpCounts, Subarray).
+
+    `naive=True` executes command-by-command (the oracle); the default path
+    runs the template-selected vectorized stream. `plan` (a CommandPlan or
+    TemplatePlan matching `naive`) lets callers reuse one encoding across
+    column tiles.
+    """
     n_sub, m_sub = w_codes.shape
     lay = HorizontalLayout(n_sub=n_sub, m_sub=m_sub, q=q, p=p,
                            subarray_rows=geom.subarray_rows,
@@ -171,8 +309,9 @@ def mvdram_gemv_subarray(w_codes: np.ndarray, a_codes: np.ndarray,
     load_matrix(sub, lay, w_codes, col_base)
     preload = sub.counts
     sub.counts = OpCounts()
-    plan = encode_commands(a_codes, p, sparsity)
-    execute_plan(sub, lay, plan)
+    if plan is None:
+        plan = _plan_for(a_codes, n_sub, p, sparsity, naive)
+    _run_plan(sub, lay, plan)
     out = read_outputs(sub, lay, m_sub, col_base)
     return out, sub.counts, preload, sub
 
@@ -220,12 +359,19 @@ class TileReport:
 def mvdram_gemv(aq: QuantizedTensor, wq: QuantizedTensor,
                 sparsity: bool = True,
                 geom: PudGeometry = PudGeometry(),
-                reliable_cols: Optional[np.ndarray] = None):
+                reliable_cols: Optional[np.ndarray] = None,
+                naive: bool = False,
+                templates: Optional[CommandTemplates] = None):
     """Full MVDRAM GeMV in the integer domain + host-side dequantization.
 
     Bit-identical to `core.quant.quantized_gemv_reference` (tested property).
     Weight group scales must align with subarray partitions: G == 1 or
     group_size % n_sub == 0.
+
+    Each reduction chunk is encoded ONCE (plan + skipped count shared by all
+    its column tiles). `templates` (e.g. from a registered `GemvHandle`)
+    short-circuits the template build for full-size chunks; `naive=True`
+    runs the retained micro-op oracle end to end.
     """
     a_u = np.asarray(aq.values, dtype=np.uint32)
     w_u = np.asarray(wq.values, dtype=np.uint32)
@@ -252,24 +398,27 @@ def mvdram_gemv(aq: QuantizedTensor, wq: QuantizedTensor,
     r_bits = 0
     for ci in range(n_chunks):
         j0, j1 = ci * n_sub, min((ci + 1) * n_sub, n)
+        n_c = j1 - j0
+        if not naive and templates is not None and templates.n_sub == n_c:
+            plan = select_templates(a_u[j0:j1], templates, sparsity)
+        else:
+            plan = _plan_for(a_u[j0:j1], n_c, p, sparsity, naive)
+        skipped += plan.skipped    # threaded out — no per-tile re-encode
         for mi in range(col_chunks):
             m0, m1 = mi * m_per_tile, min((mi + 1) * m_per_tile, m)
             w_tile = w_u[j0:j1, m0:m1]
             if reliable_cols is None:
                 out, rt, pre, _ = mvdram_gemv_subarray(
-                    w_tile, a_u[j0:j1], q, p, sparsity, geom)
+                    w_tile, a_u[j0:j1], q, p, sparsity, geom, plan=plan,
+                    naive=naive)
             else:
                 out, rt, pre = _gemv_tile_on_slots(
                     w_tile, a_u[j0:j1], q, p, sparsity, geom,
-                    reliable_cols, slots[: m1 - m0])
+                    reliable_cols, slots[: m1 - m0], plan=plan)
             partials[ci, m0:m1] = out
             runtime = runtime.merge(rt)
             preload = preload.merge(pre)
-        lay = HorizontalLayout(n_sub=j1 - j0, m_sub=1, q=q, p=p,
-                               subarray_rows=geom.subarray_rows,
-                               subarray_cols=geom.subarray_cols)
-        r_bits = max(r_bits, lay.r)
-        skipped += encode_commands(a_u[j0:j1], p, sparsity).skipped
+        r_bits = max(r_bits, accumulator_width(n_c, p))
 
     # Host aggregation with zero-point correction (paper §II-C2 / quant.py).
     chunk_per_group = gs // n_sub if g > 1 else n_chunks
@@ -292,7 +441,7 @@ def mvdram_gemv(aq: QuantizedTensor, wq: QuantizedTensor,
 
 
 def _gemv_tile_on_slots(w_tile, a_tile, q, p, sparsity, geom,
-                        reliable_cols, slots):
+                        reliable_cols, slots, plan=None, naive=False):
     """Tile execution with per-output column slots on reliable runs."""
     n_sub, m_sub = w_tile.shape
     lay = HorizontalLayout(n_sub=n_sub, m_sub=geom.subarray_cols // q,
@@ -311,7 +460,9 @@ def _gemv_tile_on_slots(w_tile, a_tile, q, p, sparsity, geom,
         sub.host_write_row(lay.inv_matrix_rows[j], 1 - row)
     preload = sub.counts
     sub.counts = OpCounts()
-    execute_plan(sub, lay, encode_commands(a_tile, p, sparsity))
+    if plan is None:
+        plan = _plan_for(a_tile, n_sub, p, sparsity, naive)
+    _run_plan(sub, lay, plan)
     rows = np.stack([sub.host_read_row(r) for r in lay.acc_rows])
     col_vals = (rows.astype(np.int64)
                 * (1 << np.arange(lay.r, dtype=np.int64))[:, None]).sum(axis=0)
@@ -325,16 +476,6 @@ def _gemv_tile_on_slots(w_tile, a_tile, q, p, sparsity, geom,
 # Analytic cost models (same formulas as the simulator; validated by test)
 # ---------------------------------------------------------------------------
 
-def adder_cost(chain_len: int) -> OpCounts:
-    """Op count of one `add_row_at_offset` with the given ripple length.
-
-    Derived from adder.py: per bit 22 RowCopy + 2 MAJ3 + 2 MAJ5; +2 RowCopy
-    carry-track initialization.
-    """
-    return OpCounts(row_copy=22 * chain_len + 2, maj3=2 * chain_len,
-                    maj5=2 * chain_len)
-
-
 def mvdram_tile_cost(n_sub: int, q: int, p: int, bit_density: float,
                      sparsity: bool = True, r: Optional[int] = None) -> OpCounts:
     """Expected runtime ops of one subarray tile.
@@ -343,7 +484,7 @@ def mvdram_tile_cost(n_sub: int, q: int, p: int, bit_density: float,
     Chain length of an add at bit-offset k is r - k (static templates, §V-C).
     """
     if r is None:
-        r = p + math.ceil(math.log2(max(n_sub, 2))) + 1
+        r = accumulator_width(n_sub, p)
     c = OpCounts(row_copy=2 * r)  # clear_accumulator
     for k in range(p):
         n_adds = n_sub * (bit_density if sparsity else 1.0)
@@ -384,7 +525,7 @@ def mvdram_gemv_cost(m: int, n: int, q: int, p: int,
     m_per_tile = cols // q
     col_chunks = math.ceil(m / m_per_tile)
     tiles = n_chunks * col_chunks
-    r = p + math.ceil(math.log2(max(n_sub, 2))) + 1
+    r = accumulator_width(n_sub, p)
     per_tile = mvdram_tile_cost(n_sub, q, p, bit_density, sparsity, r)
     runtime = per_tile.scaled(tiles)
     agg_bits = tiles * r * cols

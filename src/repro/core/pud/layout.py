@@ -19,6 +19,15 @@ import dataclasses
 import math
 
 
+def accumulator_width(n_sub: int, p: int) -> int:
+    """Bits r needed by a column accumulator: max value is (2^p − 1)·N_sub.
+
+    Single source of truth — the layout, the command templates and the
+    analytic cost models all derive r from here.
+    """
+    return p + math.ceil(math.log2(max(n_sub, 2))) + 1
+
+
 @dataclasses.dataclass
 class HorizontalLayout:
     n_sub: int              # reduction rows in this subarray (<=128, §VII)
@@ -29,7 +38,7 @@ class HorizontalLayout:
     subarray_cols: int = 1024
 
     def __post_init__(self):
-        self.r = self.p + math.ceil(math.log2(max(self.n_sub, 2))) + 1
+        self.r = accumulator_width(self.n_sub, self.p)
         c = 0
         self.zero_row = c; c += 1
         self.one_row = c; c += 1

@@ -12,9 +12,21 @@ TPU adaptation of the paper's §VI horizontal layout:
   * The paper's processor-side zero-point correction (§II-C2) is the kernel
     epilogue, computed per reduction tile so per-group scales stay local.
 
-Both kernels accumulate across the reduction grid axis into the output block
-(grid = (m_tiles, n_tiles), out indexed by m only — revisited blocks persist
-in VMEM, initialized at n==0).
+Bit-serial fidelity levels (the §V-D linearity collapse): the mathematics
+    Σ_k 2^k · (a^(k) · W^(i))  =  (Σ_k 2^k a^(k)) · W^(i)  =  a_codes · W^(i)
+means the p activation-plane dots per weight plane collapse into ONE integer
+dot against the raw codes — both sides are exact integer arithmetic, so the
+results are identical, not approximations. `fidelity="code"` (default)
+issues q dots per tile; `fidelity="bitserial"` retains the fully decomposed
+q·p-dot schedule — the command-for-command analogue of what the DRAM
+executes — as the tested-equal oracle. `dots_per_tile` exposes the issue
+count the benchmark trajectory records.
+
+Shared structure: `_unpack_words` expansion of every weight plane is hoisted
+out of the (i, k) accumulation loops — each plane is unpacked exactly once
+per tile regardless of fidelity. Both kernels accumulate across the
+reduction grid axis into the output block (grid = (m_tiles, n_tiles), out
+indexed by m only — revisited blocks persist in VMEM, initialized at n==0).
 """
 from __future__ import annotations
 
@@ -23,7 +35,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from ..compat import CompilerParams
 
 
 def _unpack_words(words: jax.Array, bn: int) -> jax.Array:
@@ -32,6 +45,11 @@ def _unpack_words(words: jax.Array, bn: int) -> jax.Array:
     shifts = jnp.arange(32, dtype=jnp.uint32)[None, :, None]
     bits = (words[:, None, :] >> shifts) & jnp.uint32(1)
     return bits.reshape(w * 32, bm)[:bn].astype(jnp.int8)
+
+
+def dots_per_tile(q: int, p: int, fidelity: str = "code") -> int:
+    """MXU dot issues per (m, n) grid cell — the §V-D collapse, measurable."""
+    return q if fidelity == "code" else q * p
 
 
 # ---------------------------------------------------------------------------
@@ -48,11 +66,13 @@ def _gemv_f_kernel(a_ref, planes_ref, scale_ref, out_ref, *, q: int,
         out_ref[...] = jnp.zeros_like(out_ref)
 
     a_blk = a_ref[...].astype(jnp.float32)              # (B, bn)
+    # hoisted: every plane expanded exactly once, before the MAC loop
+    planes = [_unpack_words(planes_ref[i], bn).astype(jnp.float32)
+              for i in range(q)]                         # q ≤ 8: unrolled
     acc = jnp.zeros((a_blk.shape[0], out_ref.shape[1]), jnp.float32)
-    for i in range(q):                                   # q ≤ 8: unrolled
-        plane = _unpack_words(planes_ref[i], bn).astype(jnp.float32)
+    for i in range(q):
         acc += (2.0 ** i) * jax.lax.dot(
-            a_blk, plane, precision=jax.lax.Precision.HIGHEST)
+            a_blk, planes[i], precision=jax.lax.Precision.HIGHEST)
     corr = acc - zero * jnp.sum(a_blk, axis=-1, keepdims=True)
     out_ref[...] += corr * scale_ref[...]                # (1, bm) broadcast
 
@@ -77,7 +97,7 @@ def gemv_f_pallas(a, planes, scale_tiles, *, q: int, zero: int,
         ],
         out_specs=pl.BlockSpec((b, bm), lambda mi, ni: (0, mi)),
         out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a, planes, scale_tiles)
@@ -86,10 +106,12 @@ def gemv_f_pallas(a, planes, scale_tiles, *, q: int, zero: int,
 # ---------------------------------------------------------------------------
 # bit-serial kernel: both operands decomposed to planes — the exact integer
 # computation MVDRAM performs in DRAM (AND + weighted popcount-accumulate).
+# fidelity="code" collapses the activation planes back into codes (§V-D
+# linearity): q int dots per tile instead of q·p, identical integers.
 # ---------------------------------------------------------------------------
 
 def _gemv_bs_kernel(a_ref, planes_ref, scale_ref, out_ref, *, q: int, p: int,
-                    z_a: int, z_w: int, bn: int):
+                    z_a: int, z_w: int, bn: int, fidelity: str):
     n_idx = pl.program_id(1)
 
     @pl.when(n_idx == 0)
@@ -99,18 +121,28 @@ def _gemv_bs_kernel(a_ref, planes_ref, scale_ref, out_ref, *, q: int, p: int,
     a_codes = a_ref[...]                                  # (B, bn) uint8 codes
     b = a_codes.shape[0]
     bm = out_ref.shape[1]
-    acc = jnp.zeros((b, bm), jnp.int32)
+    # hoisted out of the (i, k) loops: each weight plane unpacked ONCE
+    planes = [_unpack_words(planes_ref[i], bn) for i in range(q)]
     col_sum = jnp.zeros((1, bm), jnp.int32)               # Σ_j w_u[j, m]
     for i in range(q):
-        plane = _unpack_words(planes_ref[i], bn)          # (bn, bm) int8
-        col_sum += (1 << i) * jnp.sum(plane.astype(jnp.int32), axis=0,
+        col_sum += (1 << i) * jnp.sum(planes[i].astype(jnp.int32), axis=0,
                                       keepdims=True)
-        for k in range(p):
-            a_bit = ((a_codes >> k) & 1).astype(jnp.int8)  # (B, bn)
-            # a^(k) AND W^(i), popcount-accumulated: an int MXU matmul.
-            partial = jax.lax.dot(a_bit, plane,
-                                  preferred_element_type=jnp.int32)
-            acc += (1 << (i + k)) * partial
+    acc = jnp.zeros((b, bm), jnp.int32)
+    if fidelity == "code":
+        # Σ_k 2^k a^(k) = a_codes ⇒ one dot per weight plane (exact).
+        a_int = a_codes.astype(jnp.int32)
+        for i in range(q):
+            acc += (1 << i) * jax.lax.dot(
+                a_int, planes[i].astype(jnp.int32),
+                preferred_element_type=jnp.int32)
+    else:  # "bitserial": the fully decomposed q·p-dot schedule (oracle)
+        a_bits = [((a_codes >> k) & 1).astype(jnp.int8) for k in range(p)]
+        for i in range(q):
+            for k in range(p):
+                # a^(k) AND W^(i), popcount-accumulated: an int MXU matmul.
+                partial = jax.lax.dot(a_bits[k], planes[i],
+                                      preferred_element_type=jnp.int32)
+                acc += (1 << (i + k)) * partial
     sum_a = jnp.sum(a_codes.astype(jnp.int32), axis=-1, keepdims=True)
     corr = acc - z_a * col_sum - z_w * sum_a + bn * z_a * z_w
     out_ref[...] += corr.astype(jnp.float32) * scale_ref[...]
@@ -118,14 +150,16 @@ def _gemv_bs_kernel(a_ref, planes_ref, scale_ref, out_ref, *, q: int, p: int,
 
 def gemv_bs_pallas(a_codes, planes, scale_tiles, *, q: int, p: int,
                    z_a: int, z_w: int, bn: int, bm: int,
-                   interpret: bool = False):
+                   fidelity: str = "code", interpret: bool = False):
     """a_codes (B, N) uint8 (pad with z_a); planes (q, N//32, M) uint32."""
+    assert fidelity in ("code", "bitserial"), fidelity
     b, n = a_codes.shape
     m = planes.shape[-1]
     wpb = bn // 32
     grid = (m // bm, n // bn)
     return pl.pallas_call(
-        functools.partial(_gemv_bs_kernel, q=q, p=p, z_a=z_a, z_w=z_w, bn=bn),
+        functools.partial(_gemv_bs_kernel, q=q, p=p, z_a=z_a, z_w=z_w,
+                          bn=bn, fidelity=fidelity),
         grid=grid,
         in_specs=[
             pl.BlockSpec((b, bn), lambda mi, ni: (0, ni)),
@@ -134,7 +168,7 @@ def gemv_bs_pallas(a_codes, planes, scale_tiles, *, q: int, p: int,
         ],
         out_specs=pl.BlockSpec((b, bm), lambda mi, ni: (0, mi)),
         out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a_codes, planes, scale_tiles)

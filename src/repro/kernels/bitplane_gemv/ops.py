@@ -5,7 +5,9 @@ rows, activation quantization for the bit-serial mode, and backend dispatch
 (`impl="pallas"` TPU kernel / `"pallas_interpret"` CPU-checkable kernel body /
 `"jnp"` oracle — the jnp path READS THE SAME PACKED PLANES, so its HLO bytes
 reflect the packed-storage memory win and it is what multi-pod dry-runs
-lower).
+lower). The bit-serial entry points take `fidelity`: "code" (default) issues
+q integer dots per tile via the §V-D linearity collapse, "bitserial" the
+fully decomposed q·p schedule — identical integers (see kernel.py).
 """
 from __future__ import annotations
 
@@ -91,20 +93,26 @@ def bitplane_gemv(a: jax.Array, bw: BitplaneWeights, *, impl: str = "jnp",
 def bitplane_gemv_bitserial(a: jax.Array, bw: BitplaneWeights,
                             a_spec: QuantSpec, *, impl: str = "jnp",
                             bn: Optional[int] = None,
-                            bm: Optional[int] = None) -> jax.Array:
-    """Quantize activations to p-bit codes, then fully bit-decomposed GeMV —
-    the exact integer computation of the paper (§V + §VI combined)."""
+                            bm: Optional[int] = None,
+                            fidelity: str = "code") -> jax.Array:
+    """Quantize activations to p-bit codes, then integer bit-plane GeMV —
+    the exact integer computation of the paper (§V + §VI combined).
+
+    `fidelity="code"` (default) uses the §V-D linearity collapse (q int dots
+    per tile); `fidelity="bitserial"` issues the fully decomposed q·p-dot
+    schedule. Identical integers either way (tested)."""
     aq = quantize_activations(a, a_spec)
     out = bitplane_gemv_codes(aq.values, bw, a_spec.bits, int(aq.zero),
-                              impl=impl, bn=bn, bm=bm)
+                              impl=impl, bn=bn, bm=bm, fidelity=fidelity)
     return out * aq.scale.reshape(out.shape[:-1] + (1,))
 
 
-@functools.partial(jax.jit, static_argnames=("p", "z_a", "impl", "bn", "bm"))
+@functools.partial(jax.jit, static_argnames=("p", "z_a", "impl", "bn", "bm",
+                                             "fidelity"))
 def bitplane_gemv_codes(a_codes: jax.Array, bw: BitplaneWeights, p: int,
                         z_a: int, *, impl: str = "jnp",
-                        bn: Optional[int] = None, bm: Optional[int] = None
-                        ) -> jax.Array:
+                        bn: Optional[int] = None, bm: Optional[int] = None,
+                        fidelity: str = "code") -> jax.Array:
     """(…, N) uint8 activation codes × bit-plane weights → un-a-scaled f32."""
     lead = a_codes.shape[:-1]
     a2 = a_codes.reshape(-1, a_codes.shape[-1])
@@ -120,5 +128,6 @@ def bitplane_gemv_codes(a_codes: jax.Array, bw: BitplaneWeights, p: int,
         out = ref.gemv_bs_ref(a2, planes, scale_t, **kw)
     else:
         out = kernel.gemv_bs_pallas(a2, planes, scale_t, **kw,
+                                    fidelity=fidelity,
                                     interpret=(impl == "pallas_interpret"))
     return out[:, :m].reshape(*lead, m)

@@ -13,7 +13,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from ..compat import CompilerParams
 
 
 def _unpack_codes(words: jax.Array, q: int, bn: int) -> jax.Array:
@@ -58,7 +59,7 @@ def quant_matmul_pallas(a, codes, scale_tiles, *, q: int, zero: int,
         ],
         out_specs=pl.BlockSpec((b, bm), lambda mi, ni: (0, mi)),
         out_shape=jax.ShapeDtypeStruct((b, m), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(a, codes, scale_tiles)

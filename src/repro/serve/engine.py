@@ -4,6 +4,14 @@
 request batch (continuous batching at the granularity real schedulers use:
 a request occupies one batch lane until finished). `make_serve_step` /
 `cache_pspecs` are the pieces the multi-pod dry-run lowers.
+
+Decode runs under ONE jitted `jax.lax.scan` over the generation steps with
+the KV cache donated (`donate_argnums`): per-token logits never round-trip
+through host argmax, and the cache is updated in place instead of being
+re-allocated per step. The per-token Python loop is retained behind
+`scan=False` as the token-for-token oracle (tested identical at
+temperature 0 and for the seeded sampling path — the scan folds the same
+per-step PRNG keys).
 """
 from __future__ import annotations
 
@@ -78,19 +86,60 @@ class ServeEngine:
         self._prefill = jax.jit(partial(self.model.prefill,
                                         max_seq=max_seq))
         self._step = jax.jit(make_serve_step(self.model))
+        self._decode_fns: dict = {}
+
+    def _decode_scan_fn(self, steps: int, temperature: float):
+        """Jitted scan over `steps` decode iterations; cache donated so XLA
+        reuses the KV buffers in place across the whole generation.
+
+        One executable is compiled and retained per distinct
+        (steps, temperature) pair — the right trade for this engine's
+        fixed-shape benchmark/serving loops; a deployment with free-form
+        per-request lengths would want a single masked scan to max_seq
+        instead (see ROADMAP)."""
+        key_ = (steps, float(temperature))
+        if key_ not in self._decode_fns:
+            model = self.model
+
+            def run(params, cache, cur, pos0, key0):
+                def body(carry, t):
+                    cache, cur, key = carry
+                    logits, cache = model.decode_step(params, cache, cur,
+                                                      pos0 + t)
+                    key = jax.random.fold_in(key, t)   # same chain as loop
+                    nxt = self._sample(logits, temperature, key)
+                    return (cache, nxt, key), nxt
+
+                (_, _, _), out = jax.lax.scan(
+                    body, (cache, cur, key0),
+                    jnp.arange(steps, dtype=jnp.int32))
+                return out                       # (steps, B)
+
+            self._decode_fns[key_] = jax.jit(run, donate_argnums=(1,))
+        return self._decode_fns[key_]
 
     def generate(self, prompts, max_new: int = 32, temperature: float = 0.0,
-                 seed: int = 0):
+                 seed: int = 0, scan: bool = True):
         """prompts: int32 (B, S0) (B ≤ slots; right-aligned padding NOT
         supported — equal-length prompts, as in the paper's benchmark).
-        Returns (B, S0 + max_new) tokens."""
+        Returns (B, S0 + max_new) tokens.
+
+        `scan=True` (default) runs all decode steps inside one jitted
+        lax.scan with the cache donated; `scan=False` keeps the per-token
+        Python loop (oracle — token-for-token identical, same PRNG folds).
+        """
         b, s0 = prompts.shape
         assert b <= self.slots
         with axis_rules(self.mesh, self.rules):
             logits, cache = self._prefill(self.params, {"tokens": prompts})
-            toks = [prompts]
             key = jax.random.PRNGKey(seed)
             cur = self._sample(logits, temperature, key)
+            if scan and max_new > 1:
+                rest = self._decode_scan_fn(max_new - 1, temperature)(
+                    self.params, cache, cur, jnp.int32(s0), key)
+                return jnp.concatenate(
+                    [prompts, cur[:, None], jnp.transpose(rest)], axis=1)
+            toks = [prompts]
             for t in range(max_new):
                 toks.append(cur[:, None])
                 if t == max_new - 1:
@@ -113,7 +162,7 @@ class ServeEngine:
         meaningful for RELATIVE comparisons, e.g. quantized vs dense)."""
         import time
         prompts = jnp.zeros((b, 8), jnp.int32)
-        _ = self.generate(prompts, max_new=2)          # warm the jits
+        _ = self.generate(prompts, max_new=n)   # warm the exact scan length
         t0 = time.perf_counter()
         _ = self.generate(prompts, max_new=n)
         dt = time.perf_counter() - t0

@@ -47,6 +47,29 @@ def test_bitplane_bitserial_kernel_vs_integer_ref(rng, n, m, b, q, p):
                                atol=1e-4 * scale)
 
 
+@pytest.mark.parametrize("n,m,b", SHAPES[:2])
+@pytest.mark.parametrize("q,p", [(2, 4), (4, 4), (3, 2)])
+def test_code_dot_fast_path_equals_bitserial(rng, n, m, b, q, p):
+    """Σ_k 2^k a^(k) = a_codes ⇒ the q-dot fast path and the decomposed
+    q·p-dot schedule produce identical integers; both match the jnp oracle."""
+    from repro.kernels.bitplane_gemv.kernel import dots_per_tile
+    w = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    a = jnp.asarray(rng.normal(size=(b, n)), jnp.float32)
+    bw = make_bitplane_weights(w, QuantSpec(bits=q))
+    spec = QuantSpec(bits=p)
+    ref = bp.bitplane_gemv_bitserial(a, bw, spec, impl="jnp")
+    code = bp.bitplane_gemv_bitserial(a, bw, spec, impl="pallas_interpret",
+                                      fidelity="code")
+    bits = bp.bitplane_gemv_bitserial(a, bw, spec, impl="pallas_interpret",
+                                      fidelity="bitserial")
+    scale = float(jnp.abs(ref).max()) + 1e-9
+    assert float(jnp.abs(code - bits).max()) / scale <= 1e-4
+    np.testing.assert_allclose(np.asarray(code), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4 * scale)
+    assert dots_per_tile(q, p, "code") == q
+    assert dots_per_tile(q, p, "bitserial") == q * p
+
+
 @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
 def test_bitplane_kernel_dtypes(rng, dtype):
     w = jnp.asarray(rng.normal(size=(256, 256)), jnp.float32)

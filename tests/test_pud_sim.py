@@ -1,6 +1,8 @@
 """PUD simulator: the in-DRAM command-stream execution must be bit-exact
 against the integer GeMV reference, under sparsity, reliability masks and
-grouped scales; analytic op counts must equal simulated counts."""
+grouped scales; analytic op counts must equal simulated counts; the
+template-selected vectorized executor must match the naive micro-op oracle
+bit-for-bit (outputs AND OpCounts)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -8,10 +10,11 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core.pud.adder import add_row_at_offset, clear_accumulator
 from repro.core.pud.device import OpCounts, Subarray
-from repro.core.pud.gemv import (PudGeometry, conventional_pud_cost,
-                                 encode_commands, mvdram_gemv,
-                                 mvdram_gemv_cost, mvdram_gemv_subarray,
-                                 mvdram_tile_cost, usable_output_slots)
+from repro.core.pud.gemv import (PudGeometry, build_templates,
+                                 conventional_pud_cost, encode_commands,
+                                 mvdram_gemv, mvdram_gemv_cost,
+                                 mvdram_gemv_subarray, mvdram_tile_cost,
+                                 select_templates, usable_output_slots)
 from repro.core.pud.layout import HorizontalLayout, horizontal_capacity_report
 from repro.core.quant import (QuantSpec, quantize_activations,
                               quantize_weights, quantized_gemv_reference)
@@ -128,5 +131,93 @@ def test_encode_commands_complexity():
     plan = encode_commands(a, p=4, sparsity=True)
     assert len(plan.adds) == 3          # three set bits total
     assert plan.skipped == 9            # 12 bit-slots − 3
+    assert plan.adds == [(0, 1), (0, 3), (1, 0)]   # j-major, k-minor order
     plan_d = encode_commands(a, p=4, sparsity=False)
     assert len(plan_d.adds) == 12
+
+
+# ---------------------------------------------------------------------------
+# Template cache + vectorized execution vs the naive micro-op oracle
+# ---------------------------------------------------------------------------
+
+def test_build_templates_static_and_cached():
+    t = build_templates(32, 4)
+    assert t is build_templates(32, 4)          # process-wide cache
+    assert t.r == 4 + 5 + 1
+    assert [o.chain_len for o in t.offsets] == [t.r - k for k in range(4)]
+    # per-add command cost is the adder's static stream
+    assert t.offsets[0].cost.row_copy == 22 * t.r + 2
+
+
+def test_select_templates_popcount():
+    a = np.array([0b1010, 0b0001, 0], np.uint8)
+    plan = select_templates(a, build_templates(3, 4), sparsity=True)
+    assert plan.popcounts == (1, 1, 0, 1)
+    assert plan.skipped == 9
+    np.testing.assert_array_equal(plan.rows_per_offset[0], [1])
+    np.testing.assert_array_equal(plan.rows_per_offset[1], [0])
+    dense = select_templates(a, build_templates(3, 4), sparsity=False)
+    assert dense.skipped == 0                   # zero slots become zero-adds
+
+
+@pytest.mark.parametrize("sparsity", [True, False])
+@pytest.mark.parametrize("q,p,n,m", [(3, 4, 40, 10), (2, 2, 16, 5),
+                                     (4, 4, 64, 8)])
+def test_vectorized_matches_naive_bit_exact(q, p, n, m, sparsity):
+    """Outputs AND OpCounts identical between the template-vectorized
+    executor and the retained naive oracle."""
+    r = np.random.default_rng(q * 100 + p * 10 + n)
+    w = jnp.asarray(r.normal(size=(n, m)), jnp.float32)
+    a = jnp.asarray(r.normal(size=(n,)), jnp.float32)
+    wq = quantize_weights(w, QuantSpec(bits=q))
+    aq = quantize_activations(a, QuantSpec(bits=p))
+    out_v, rep_v = mvdram_gemv(aq, wq, sparsity=sparsity, geom=GEOM)
+    out_n, rep_n = mvdram_gemv(aq, wq, sparsity=sparsity, geom=GEOM,
+                               naive=True)
+    np.testing.assert_array_equal(np.asarray(out_v), np.asarray(out_n))
+    assert rep_v.runtime.asdict() == rep_n.runtime.asdict()
+    assert rep_v.preload.asdict() == rep_n.preload.asdict()
+    assert rep_v.skipped_bits == rep_n.skipped_bits
+
+
+def test_vectorized_subarray_state_matches_naive(rng):
+    """The accumulator rows (value + complement tracks) land bit-identical."""
+    q, p, n, m = 3, 3, 24, 6
+    w_codes = rng.integers(0, 2 ** q, size=(n, m)).astype(np.uint8)
+    a_codes = rng.integers(0, 2 ** p, size=(n,)).astype(np.uint8)
+    gg = PudGeometry(subarray_cols=32, n_sub_max=n)
+    _, _, _, sub_v = mvdram_gemv_subarray(w_codes, a_codes, q, p, geom=gg)
+    _, _, _, sub_n = mvdram_gemv_subarray(w_codes, a_codes, q, p, geom=gg,
+                                          naive=True)
+    from repro.core.pud.layout import HorizontalLayout as HL
+    lay = HL(n_sub=n, m_sub=m, q=q, p=p, subarray_cols=32)
+    for rows in (lay.acc_rows, lay.acc_c_rows):
+        np.testing.assert_array_equal(sub_v.data[rows], sub_n.data[rows])
+
+
+@pytest.mark.slow
+def test_vectorized_matches_naive_512x256_q4p4():
+    """The benchmark shape, end to end (naive oracle — slow by design)."""
+    r = np.random.default_rng(0)
+    w = jnp.asarray(r.normal(size=(512, 256)), jnp.float32)
+    a = jnp.asarray(r.normal(size=(512,)), jnp.float32)
+    wq = quantize_weights(w, QuantSpec(bits=4))
+    aq = quantize_activations(a, QuantSpec(bits=4))
+    out_v, rep_v = mvdram_gemv(aq, wq)
+    out_n, rep_n = mvdram_gemv(aq, wq, naive=True)
+    np.testing.assert_array_equal(np.asarray(out_v), np.asarray(out_n))
+    assert rep_v.runtime.asdict() == rep_n.runtime.asdict()
+
+
+def test_engine_handle_carries_templates(rng):
+    from repro.core.engine import MVDRAMEngine
+    eng = MVDRAMEngine(geom=PudGeometry(subarray_cols=64, n_sub_max=32))
+    w = jnp.asarray(rng.normal(size=(64, 8)), jnp.float32)
+    h = eng.register("m", w, QuantSpec(bits=3), a_spec=QuantSpec(bits=4))
+    assert h.templates is not None
+    assert h.templates.n_sub == h.plan.n_sub
+    assert h.templates is build_templates(h.plan.n_sub, 4)  # shared cache
+    a = jnp.asarray(rng.normal(size=(64,)), jnp.float32)
+    o_t, _ = eng.gemv(h, a, mode="sim")
+    o_n, _ = eng.gemv(h, a, mode="sim", naive=True)
+    np.testing.assert_array_equal(np.asarray(o_t), np.asarray(o_n))

@@ -35,6 +35,7 @@ from .bitplane import (BitplaneWeights, bitplane_gemv_bitserial,
 from .pud.gemv import (CommandTemplates, GemvCost, PudGeometry,
                        build_templates, conventional_pud_cost, mvdram_gemv,
                        mvdram_gemv_cost)
+from .pud.schedule import schedule_tiles
 from .pud.timing import (DDR4_2400, CpuBaseline, DDR4Model, GpuBaseline,
                          PudCost, price_gemv)
 from .quant import (QuantSpec, QuantizedTensor, quantize_activations,
@@ -59,14 +60,11 @@ class PartitionPlan:
         return self.n_chunks * self.col_chunks
 
     def placement(self, geom: PudGeometry):
-        """tile index -> (channel, bank, wave) round-robin placement."""
-        out = []
-        for t in range(self.tiles):
-            ch = t % geom.channels
-            slot = t // geom.channels
-            out.append((ch, slot % geom.banks_per_channel,
-                        slot // geom.banks_per_channel))
-        return out
+        """tile index -> (channel, bank, wave), delegated to the wave
+        scheduler so the engine, the simulator and the price model all share
+        one §VII placement."""
+        sched = schedule_tiles(self.n_chunks, self.col_chunks, geom)
+        return [(a.channel, a.bank, a.wave) for a in sched.assignments]
 
 
 def make_plan(m: int, n: int, q: int, p: int,
@@ -137,10 +135,12 @@ class MVDRAMEngine:
 
     def gemv(self, handle: GemvHandle | str, a: jax.Array,
              mode: str = "jnp", fidelity: str = "code",
-             naive: bool = False):
+             naive: bool = False, wave: Optional[bool] = None):
         """`fidelity` selects the Pallas bit-serial schedule ("code" = q dots
         via the §V-D linearity collapse, "bitserial" = decomposed q·p);
-        `naive=True` runs the sim micro-op by micro-op (the oracle)."""
+        `naive=True` runs the sim micro-op by micro-op (the oracle); `wave`
+        toggles the sim's wave-parallel BankArray dispatch (default on when
+        not naive)."""
         h = self.handles[handle] if isinstance(handle, str) else handle
         if mode == "jnp":
             if h.a_spec is None:
@@ -163,7 +163,7 @@ class MVDRAMEngine:
             aq = quantize_activations(a, h.a_spec)
             out, report = mvdram_gemv(aq, h.wq, sparsity=self.sparsity,
                                       geom=self.geom, naive=naive,
-                                      templates=h.templates)
+                                      templates=h.templates, wave=wave)
             return jnp.asarray(out), report
         raise ValueError(f"unknown mode {mode!r}")
 

@@ -1,15 +1,19 @@
 """Functional + cost model of Processing-Using-DRAM on unmodified DRAM.
 
-`device.py`  — subarray bit-array model with RowCopy / MAJX command streams
-`adder.py`   — dual-track (value+complement) MAJ3/MAJ5 full adders
-`layout.py`  — horizontal (MVDRAM) and vertical (conventional PUD) layouts
-`gemv.py`    — on-the-fly vector encoding → in-DRAM GeMV execution
-`timing.py`  — DDR4-2400 command timing + energy model, CPU/GPU baselines
+`device.py`   — subarray + wave-parallel BankArray bit-array models with
+                RowCopy / MAJX command streams
+`adder.py`    — dual-track (value+complement) MAJ3/MAJ5 full adders, per-tile
+                and wave-batched ripple-carry
+`layout.py`   — horizontal (MVDRAM) and vertical (conventional PUD) layouts
+`schedule.py` — §VII channel/bank tile placement + wave scheduling
+`gemv.py`     — on-the-fly vector encoding → in-DRAM GeMV execution
+`timing.py`   — DDR4-2400 command timing + energy model, CPU/GPU baselines
 """
-from .device import Subarray, OpCounts
+from .device import BankArray, Subarray, OpCounts
 from .layout import HorizontalLayout, horizontal_capacity_report
+from .schedule import PudGeometry, TileAssignment, WaveSchedule, schedule_tiles
 from .gemv import (CommandTemplates, TemplatePlan, build_templates,
                    conventional_pud_cost, mvdram_gemv, mvdram_gemv_subarray,
                    select_templates)
 from .timing import (DDR4Model, CpuBaseline, GpuBaseline, PudCost,
-                     TPU_V5E, DDR4_2400)
+                     TPU_V5E, DDR4_2400, bank_waves, simulated_wave_time)

@@ -16,19 +16,25 @@ then hold the result, which is RowCopied to its destination.
 
 Two execution granularities share the same command accounting:
 
-  `add_row_at_offset`   one add, micro-op by micro-op (the naive oracle —
-                        every RowCopy/MAJX touches the bit array).
-  `add_rows_batched`    ALL adds sharing one bit offset as a single
-                        vectorized ripple-carry over an (n_adds, cols)
-                        operand block; commands are charged analytically
-                        (`adder_cost` per add), so OpCounts and the final
-                        accumulator state are identical to the naive path.
+Three execution granularities share the same command accounting:
+
+  `add_row_at_offset`       one add, micro-op by micro-op (the naive oracle —
+                            every RowCopy/MAJX touches the bit array).
+  `add_rows_batched`        ALL adds sharing one bit offset as a single
+                            vectorized ripple-carry over an (n_adds, cols)
+                            operand block; commands are charged analytically
+                            (`adder_cost` per add), so OpCounts and the final
+                            accumulator state are identical to the naive path.
+  `add_rows_batched_wave`   the same collapse ACROSS a whole wave of banks: a
+                            (tiles, n_sub) participation mask drives one
+                            einsum over the BankArray's (tiles, rows, cols)
+                            state, each tile billed for its own popcount.
 """
 from __future__ import annotations
 
 import numpy as np
 
-from .device import OpCounts, Subarray
+from .device import BankArray, OpCounts, Subarray
 from .layout import HorizontalLayout
 
 
@@ -101,7 +107,10 @@ def add_row_at_offset(sub: Subarray, lay: HorizontalLayout,
         sub.row_copy(nc_c, carry_c)
 
 
-def clear_accumulator(sub: Subarray, lay: HorizontalLayout) -> None:
+def clear_accumulator(sub: Subarray | BankArray,
+                      lay: HorizontalLayout) -> None:
+    """2·r RowCopies; on a BankArray each copy broadcasts to every bank of
+    the wave (one command per channel bus slot, §VII)."""
     for b in range(lay.r):
         sub.row_copy(lay.zero_row, lay.acc_rows[b])
         sub.row_copy(lay.one_row, lay.acc_c_rows[b])
@@ -160,3 +169,63 @@ def add_rows_batched(sub: Subarray, lay: HorizontalLayout,
         sub.counts.row_copy += per_add.row_copy * n_adds
         sub.counts.maj3 += per_add.maj3 * n_adds
         sub.counts.maj5 += per_add.maj5 * n_adds
+
+
+# ---------------------------------------------------------------------------
+# Wave-parallel execution (all banks of a wave advance in one numpy step)
+# ---------------------------------------------------------------------------
+
+def add_rows_batched_wave(bank: BankArray, lay: HorizontalLayout,
+                          masks: np.ndarray, offset: int,
+                          n_zero_adds: np.ndarray | None = None,
+                          matrix_block: np.ndarray | None = None,
+                          acc_val: np.ndarray | None = None) -> np.ndarray:
+    """Accumulator[t] += Σ_j masks[t, j]·(matrix row j of tile t) << offset,
+    for every tile t of the wave at once.
+
+    `masks` is the (tiles, n_sub) boolean popcount selection — tiles from
+    different reduction chunks participate with different matrix rows, but
+    the command TEMPLATE (offset, chain length) is shared, so the whole wave
+    advances in one einsum + one accumulator rewrite. Value semantics and
+    per-tile command charges are exactly `add_rows_batched` applied to each
+    tile (tested equivalence, outputs AND OpCounts).
+
+    `n_zero_adds[t]` bills tile t's conventional zero-row adds when the
+    bit-sparsity optimization is disabled. `matrix_block` (the int64 matrix
+    rows, static during compute) and `acc_val` (the running (tiles, cols)
+    accumulator value, column-wise identical to decoding the accumulator
+    rows) let a caller issuing all p offsets skip re-reading bank state;
+    returns the updated accumulator value either way.
+    """
+    masks = np.asarray(masks, dtype=bool)
+    chain_len = lay.r - offset
+    acc_idx = np.asarray(lay.acc_rows)
+    if acc_val is None:
+        weights = (1 << np.arange(lay.r, dtype=np.int64))[None, :, None]
+        acc_val = (bank.data[:, acc_idx].astype(np.int64)
+                   * weights).sum(axis=1)                       # (T, cols)
+    if masks.any():
+        if matrix_block is None:
+            matrix_block = bank.data[:, lay.matrix_rows].astype(np.int32)
+        addend = np.matmul(masks[:, None, :].astype(matrix_block.dtype),
+                           matrix_block)[:, 0].astype(np.int64) << offset
+        acc_val = (acc_val + addend) & ((1 << lay.r) - 1)
+        # r ≤ 16 for any legal layout, so decode in int32 (half the traffic)
+        new_bits = ((acc_val.astype(np.int32)[:, None, :]
+                     >> np.arange(lay.r, dtype=np.int32)[None, :, None]) & 1
+                    ).astype(np.uint8)
+        acc_c_idx = np.asarray(lay.acc_c_rows)
+        if bank.all_reliable:
+            bank.data[:, acc_idx] = new_bits
+            bank.data[:, acc_c_idx] = 1 - new_bits
+        else:
+            rel = bank.reliable[None, None, :]
+            bank.data[:, acc_idx] = np.where(rel, new_bits,
+                                             bank.data[:, acc_idx])
+            bank.data[:, acc_c_idx] = np.where(rel, 1 - new_bits,
+                                               bank.data[:, acc_c_idx])
+    n_adds = masks.sum(axis=1, dtype=np.int64)
+    if n_zero_adds is not None:
+        n_adds = n_adds + np.asarray(n_zero_adds, dtype=np.int64)
+    bank.charge_adds(adder_cost(chain_len), n_adds)
+    return acc_val

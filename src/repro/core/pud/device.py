@@ -35,12 +35,11 @@ class OpCounts:
     host_int_ops: int = 0        # processor-side aggregation arithmetic
 
     def merge(self, other: "OpCounts") -> "OpCounts":
-        return OpCounts(*(getattr(self, f.name) + getattr(other, f.name)
-                          for f in dataclasses.fields(OpCounts)))
+        return OpCounts(*(getattr(self, f) + getattr(other, f)
+                          for f in _COUNT_FIELDS))
 
     def scaled(self, k: int) -> "OpCounts":
-        return OpCounts(*(getattr(self, f.name) * k
-                          for f in dataclasses.fields(OpCounts)))
+        return OpCounts(*(getattr(self, f) * k for f in _COUNT_FIELDS))
 
     @property
     def pud_ops(self) -> int:
@@ -48,6 +47,9 @@ class OpCounts:
 
     def asdict(self):
         return dataclasses.asdict(self)
+
+
+_COUNT_FIELDS = tuple(f.name for f in dataclasses.fields(OpCounts))
 
 
 class Subarray:
@@ -99,3 +101,106 @@ class Subarray:
     def host_read_row(self, row: int) -> np.ndarray:
         self.counts.host_bits_read += self.cols
         return self.data[row].copy()
+
+
+class BankArray:
+    """All subarrays of one execution WAVE as a (tiles, rows, cols) bit array.
+
+    The rank computes `channels × banks_per_channel` subarrays concurrently
+    (paper §VII); within a wave every bank receives the same command stream
+    skeleton (the static templates are shared), so a broadcast PUD primitive
+    advances ALL tiles in one numpy step — this is what lets the simulator
+    run benchmark shapes in a handful of waves instead of hundreds of
+    sequential tiles.
+
+    Command accounting is split into a `shared` OpCounts (broadcast ops every
+    tile executes — RowCopy/MAJX/uniform host traffic) plus a vectorized
+    per-tile ledger (data-dependent add streams differ per tile via popcount
+    selection); `tile_counts()` materializes the per-tile totals, which are
+    identical to what the sequential per-tile oracle counts (tested).
+    """
+
+    # per-tile ledger columns (the only fields that vary within a wave)
+    _RC, _M3, _M5, _HI = range(4)
+
+    def __init__(self, tiles: int, rows: int = 512, cols: int = 1024,
+                 reliable_cols: np.ndarray | None = None):
+        self.tiles = tiles
+        self.rows = rows
+        self.cols = cols
+        self.data = np.zeros((tiles, rows, cols), dtype=np.uint8)
+        self.reliable = (np.ones(cols, dtype=bool) if reliable_cols is None
+                         else reliable_cols.astype(bool))
+        self.all_reliable = bool(self.reliable.all())
+        self.shared = OpCounts()
+        self.extra = np.zeros((tiles, 4), dtype=np.int64)
+
+    # -- broadcast PUD primitives (one command, all banks of the wave) -------
+
+    def row_copy(self, src: int, dst: int) -> None:
+        self.data[:, dst] = self.data[:, src]
+        self.shared.row_copy += 1
+
+    def majx(self, rows: list[int]) -> None:
+        x = len(rows)
+        assert x % 2 == 1 and x >= 3, "MAJX needs an odd row count >= 3"
+        votes = self.data[:, rows].sum(axis=1)
+        result = (votes > x // 2).astype(np.uint8)
+        out = np.where(self.reliable[None, :], result, self.data[:, rows[0]])
+        for r in rows:
+            self.data[:, r] = out
+        if x == 3:
+            self.shared.maj3 += 1
+        elif x == 5:
+            self.shared.maj5 += 1
+        else:
+            self.shared.majx_other += 1
+
+    # -- host access (per-bank data bus; traffic uniform across the wave) ----
+
+    def host_write_row(self, row: int, bits: np.ndarray) -> None:
+        """Broadcast one (cols,) row to every tile (constant rows)."""
+        assert bits.shape == (self.cols,)
+        self.data[:, row] = bits.astype(np.uint8)[None, :]
+        self.shared.host_bits_written += self.cols
+
+    def host_write_rows(self, rows_idx, bits: np.ndarray) -> None:
+        """Per-tile block write: bits is (tiles, len(rows_idx), cols)."""
+        rows_idx = np.asarray(rows_idx)
+        assert bits.shape == (self.tiles, rows_idx.shape[0], self.cols)
+        self.data[:, rows_idx] = bits.astype(np.uint8)
+        self.shared.host_bits_written += rows_idx.shape[0] * self.cols
+
+    def host_read_rows(self, rows_idx) -> np.ndarray:
+        """(tiles, len(rows_idx), cols) block read (output aggregation)."""
+        rows_idx = np.asarray(rows_idx)
+        self.shared.host_bits_read += rows_idx.shape[0] * self.cols
+        return self.data[:, rows_idx].copy()
+
+    # -- accounting ----------------------------------------------------------
+
+    def charge_adds(self, per_add: OpCounts, n_adds: np.ndarray) -> None:
+        """Bill `n_adds[t]` copies of a static add template to each tile —
+        one vectorized ledger update for the whole wave."""
+        self.extra[:, self._RC] += per_add.row_copy * n_adds
+        self.extra[:, self._M3] += per_add.maj3 * n_adds
+        self.extra[:, self._M5] += per_add.maj5 * n_adds
+
+    def charge_host_int_ops(self, n_per_tile: np.ndarray) -> None:
+        """Bill aggregation arithmetic: (tiles,) host integer op counts."""
+        self.extra[:, self._HI] += n_per_tile
+
+    def tile_counts(self) -> list[OpCounts]:
+        s = self.shared
+        return [OpCounts(row_copy=s.row_copy + int(e[self._RC]),
+                         maj3=s.maj3 + int(e[self._M3]),
+                         maj5=s.maj5 + int(e[self._M5]),
+                         majx_other=s.majx_other,
+                         host_bits_written=s.host_bits_written,
+                         host_bits_read=s.host_bits_read,
+                         host_int_ops=s.host_int_ops + int(e[self._HI]))
+                for e in self.extra]
+
+    def reset_counts(self) -> None:
+        self.shared = OpCounts()
+        self.extra = np.zeros((self.tiles, 4), dtype=np.int64)

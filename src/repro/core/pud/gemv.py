@@ -36,6 +36,22 @@ popcount selection of §V-D). Execution then runs one batched ripple-carry
 per offset (`adder.add_rows_batched`) instead of one Python-level add per
 set bit. The micro-op-by-micro-op path is retained behind `naive=True` as
 the bit-exact oracle: outputs AND OpCounts are identical (tested).
+
+Wave execution model (paper §VII): the rank computes
+`geom.channels × geom.banks_per_channel` subarrays CONCURRENTLY; tiles beyond
+that capacity serialize in waves. `schedule.schedule_tiles` places each
+(reduction_chunk, column_chunk) tile on a (channel, bank, wave) slot
+round-robin, and the default execution path (`wave=True`) dispatches one
+whole wave at a time through `device.BankArray` — a (tiles, rows, cols) bit
+array whose RowCopy/MAJX and batched ripple-carry
+(`adder.add_rows_batched_wave`) broadcast across the tile axis, so an entire
+wave advances in one numpy step. Tiles of a wave that share a row layout
+(same reduction-chunk length, hence same accumulator width r) execute as one
+group; the ragged last chunk forms its own group. Outputs and PER-TILE
+OpCounts are bit-identical to the retained sequential per-tile path
+(`wave=False`, the oracle), and the per-wave op maxima recorded in
+`TileReport.wave_max` reconcile with the analytic bank-wave math of
+`timing.price_gemv` (tested).
 """
 from __future__ import annotations
 
@@ -47,32 +63,13 @@ from typing import Optional
 import numpy as np
 
 from ..quant import QuantizedTensor
-from .adder import (add_row_at_offset, add_rows_batched, adder_cost,
-                    clear_accumulator)
-from .device import OpCounts, Subarray
+from .adder import (add_row_at_offset, add_rows_batched,
+                    add_rows_batched_wave, adder_cost, clear_accumulator)
+from .device import _COUNT_FIELDS, BankArray, OpCounts, Subarray
 from .layout import (HorizontalLayout, VerticalLayout,
                      accumulator_width)
-
-
-@dataclasses.dataclass(frozen=True)
-class PudGeometry:
-    """Physical resources available to one GeMV launch.
-
-    `subarray_cols` is the simulated width (kept small for tractability);
-    `real_cols` is the physical bitline count used by the cost model
-    (65,536 across the chips of a DDR4 rank, paper §II-B).
-    """
-
-    subarray_rows: int = 512
-    subarray_cols: int = 1024
-    real_cols: int = 65536
-    n_sub_max: int = 128          # paper §VII: N ≤ 128 per subarray
-    channels: int = 4             # four DDR4 modules (paper §VII)
-    banks_per_channel: int = 16   # concurrently computing subarrays / channel
-
-    @property
-    def parallel_tiles(self) -> int:
-        return self.channels * self.banks_per_channel
+from .schedule import (PudGeometry, WaveSchedule,  # noqa: F401 (re-export)
+                       schedule_tiles)
 
 
 # ---------------------------------------------------------------------------
@@ -354,6 +351,15 @@ class TileReport:
     skipped_bits: int
     r_bits: int
     aggregate_bits: int  # output bits crossing the data bus
+    # Wave-level accounting (§VII placement): tiles serialize in `waves`
+    # across the channels × banks rank; a wave is bound by its slowest bank,
+    # so `wave_max[w]` keeps the field-wise max OpCounts over wave w's tiles.
+    # `tile_runtime`/`tile_preload` hold the per-tile counts in tile order —
+    # the wave path and the sequential oracle produce identical entries.
+    waves: int = 0
+    wave_max: tuple = ()
+    tile_runtime: tuple = ()
+    tile_preload: tuple = ()
 
 
 def mvdram_gemv(aq: QuantizedTensor, wq: QuantizedTensor,
@@ -361,7 +367,8 @@ def mvdram_gemv(aq: QuantizedTensor, wq: QuantizedTensor,
                 geom: PudGeometry = PudGeometry(),
                 reliable_cols: Optional[np.ndarray] = None,
                 naive: bool = False,
-                templates: Optional[CommandTemplates] = None):
+                templates: Optional[CommandTemplates] = None,
+                wave: Optional[bool] = None):
     """Full MVDRAM GeMV in the integer domain + host-side dequantization.
 
     Bit-identical to `core.quant.quantized_gemv_reference` (tested property).
@@ -372,7 +379,17 @@ def mvdram_gemv(aq: QuantizedTensor, wq: QuantizedTensor,
     its column tiles). `templates` (e.g. from a registered `GemvHandle`)
     short-circuits the template build for full-size chunks; `naive=True`
     runs the retained micro-op oracle end to end.
+
+    `wave` selects wave-parallel execution (default when not naive): whole
+    waves of the §VII channel/bank placement advance through one `BankArray`
+    numpy step. `wave=False` runs the retained sequential per-tile path —
+    the bit-exact oracle for outputs AND per-tile OpCounts.
     """
+    if wave is None:
+        wave = not naive
+    if wave and naive:
+        raise ValueError("the naive micro-op oracle is per-tile only; "
+                         "use wave=False (or omit wave) with naive=True")
     a_u = np.asarray(aq.values, dtype=np.uint32)
     w_u = np.asarray(wq.values, dtype=np.uint32)
     assert a_u.ndim == 1, "GeMV takes a single activation vector"
@@ -381,6 +398,10 @@ def mvdram_gemv(aq: QuantizedTensor, wq: QuantizedTensor,
     n_sub = min(geom.n_sub_max, n)
     n_chunks = math.ceil(n / n_sub)
     g = wq.scale.shape[0]
+    if n % g:
+        raise ValueError(
+            f"weight scale groups must tile the reduction dim: N={n} is not "
+            f"divisible by G={g} groups (group_size must divide N)")
     gs = n // g
     if g > 1 and gs % n_sub:
         raise ValueError(f"group size {gs} must be a multiple of n_sub {n_sub}")
@@ -390,10 +411,15 @@ def mvdram_gemv(aq: QuantizedTensor, wq: QuantizedTensor,
     else:
         slots = np.arange(geom.subarray_cols // q) * q
     m_per_tile = slots.shape[0]
+    if m_per_tile == 0:
+        raise ValueError(
+            f"no usable output slots: need a run of q={q} consecutive "
+            f"reliable columns in the first {geom.subarray_cols} bitlines")
     col_chunks = math.ceil(m / m_per_tile)
+    sched = schedule_tiles(n_chunks, col_chunks, geom)
 
-    partials = np.zeros((n_chunks, m), dtype=np.int64)
-    runtime, preload = OpCounts(), OpCounts()
+    # Encode each reduction chunk ONCE (plan shared by all its column tiles).
+    plans = []
     skipped = 0
     r_bits = 0
     for ci in range(n_chunks):
@@ -403,22 +429,45 @@ def mvdram_gemv(aq: QuantizedTensor, wq: QuantizedTensor,
             plan = select_templates(a_u[j0:j1], templates, sparsity)
         else:
             plan = _plan_for(a_u[j0:j1], n_c, p, sparsity, naive)
+        plans.append(plan)
         skipped += plan.skipped    # threaded out — no per-tile re-encode
-        for mi in range(col_chunks):
-            m0, m1 = mi * m_per_tile, min((mi + 1) * m_per_tile, m)
-            w_tile = w_u[j0:j1, m0:m1]
-            if reliable_cols is None:
-                out, rt, pre, _ = mvdram_gemv_subarray(
-                    w_tile, a_u[j0:j1], q, p, sparsity, geom, plan=plan,
-                    naive=naive)
-            else:
-                out, rt, pre = _gemv_tile_on_slots(
-                    w_tile, a_u[j0:j1], q, p, sparsity, geom,
-                    reliable_cols, slots[: m1 - m0], plan=plan)
-            partials[ci, m0:m1] = out
-            runtime = runtime.merge(rt)
-            preload = preload.merge(pre)
         r_bits = max(r_bits, accumulator_width(n_c, p))
+
+    if wave:
+        partials, tile_rt, tile_pre = _gemv_waves(
+            w_u, q, p, geom, plans, sched, slots, reliable_cols, n_sub, m)
+    else:
+        partials = np.zeros((n_chunks, m), dtype=np.int64)
+        tile_rt = [None] * sched.tiles
+        tile_pre = [None] * sched.tiles
+        for ci in range(n_chunks):
+            j0, j1 = ci * n_sub, min((ci + 1) * n_sub, n)
+            for mi in range(col_chunks):
+                m0, m1 = mi * m_per_tile, min((mi + 1) * m_per_tile, m)
+                w_tile = w_u[j0:j1, m0:m1]
+                if reliable_cols is None:
+                    out, rt, pre, _ = mvdram_gemv_subarray(
+                        w_tile, a_u[j0:j1], q, p, sparsity, geom,
+                        plan=plans[ci], naive=naive)
+                else:
+                    out, rt, pre = _gemv_tile_on_slots(
+                        w_tile, a_u[j0:j1], q, p, sparsity, geom,
+                        reliable_cols, slots[: m1 - m0], plan=plans[ci])
+                partials[ci, m0:m1] = out
+                tile_rt[ci * col_chunks + mi] = rt
+                tile_pre[ci * col_chunks + mi] = pre
+
+    # Totals + per-wave maxima in two numpy reductions (waves are contiguous
+    # tile ranges under the round-robin placement).
+    rt_arr = np.asarray([[getattr(c, f) for f in _COUNT_FIELDS]
+                         for c in tile_rt], dtype=np.int64)
+    pre_arr = np.asarray([[getattr(c, f) for f in _COUNT_FIELDS]
+                          for c in tile_pre], dtype=np.int64)
+    runtime = OpCounts(*map(int, rt_arr.sum(axis=0)))
+    preload = OpCounts(*map(int, pre_arr.sum(axis=0)))
+    pt = geom.parallel_tiles
+    wave_max = [OpCounts(*map(int, rt_arr[w * pt:(w + 1) * pt].max(axis=0)))
+                for w in range(sched.waves)]
 
     # Host aggregation with zero-point correction (paper §II-C2 / quant.py).
     chunk_per_group = gs // n_sub if g > 1 else n_chunks
@@ -436,8 +485,109 @@ def mvdram_gemv(aq: QuantizedTensor, wq: QuantizedTensor,
         n_chunks=n_chunks, col_chunks=col_chunks,
         tiles=n_chunks * col_chunks, runtime=runtime, preload=preload,
         skipped_bits=skipped, r_bits=r_bits,
-        aggregate_bits=n_chunks * col_chunks * r_bits * geom.subarray_cols)
+        aggregate_bits=n_chunks * col_chunks * r_bits * geom.subarray_cols,
+        waves=sched.waves, wave_max=tuple(wave_max),
+        tile_runtime=tuple(tile_rt), tile_preload=tuple(tile_pre))
     return out.astype(np.float32), report
+
+
+def _gemv_waves(w_u: np.ndarray, q: int, p: int, geom: PudGeometry,
+                plans: list, sched: WaveSchedule, slots: np.ndarray,
+                reliable_cols: Optional[np.ndarray], n_sub: int, m: int):
+    """Execute the scheduled tiles wave by wave through `BankArray`.
+
+    Tiles of a wave sharing a reduction-chunk length n_c (hence the same row
+    layout and accumulator width r) form one group that advances in single
+    numpy steps; the ragged last chunk contributes at most one extra group
+    per wave. Per-tile OpCounts reproduce the sequential oracle exactly.
+    """
+    n = w_u.shape[0]
+    cols = geom.subarray_cols
+    m_per_tile = slots.shape[0]
+    rel = (reliable_cols[:cols] if reliable_cols is not None else None)
+    partials = np.zeros((sched.n_chunks, m), dtype=np.int64)
+    tile_rt = [None] * sched.tiles
+    tile_pre = [None] * sched.tiles
+    q_arange = np.arange(q)
+    q_shift = np.arange(q, dtype=np.int64)
+    slot_cols = (slots[:, None] + q_arange[None, :]).ravel()  # (m_per_tile·q,)
+
+    def chunk_len(ci: int) -> int:
+        return min((ci + 1) * n_sub, n) - ci * n_sub
+
+    # Per-chunk activation bit matrices, shared by every tile of the chunk.
+    chunk_bits = [None] * sched.n_chunks
+    chunk_zero_adds = [None] * sched.n_chunks
+    for ci, plan in enumerate(plans):
+        bits = np.zeros((chunk_len(ci), p), dtype=bool)
+        for k in range(p):
+            bits[plan.rows_per_offset[k], k] = True
+        chunk_bits[ci] = bits
+        chunk_zero_adds[ci] = (None if plan.sparsity
+                               else np.asarray(plan.zero_slots, np.int64))
+
+    for w in range(sched.waves):
+        members = sched.wave_members(w)
+        for n_c in sorted({chunk_len(a.chunk) for a in members}):
+            group = [a for a in members if chunk_len(a.chunk) == n_c]
+            T = len(group)
+            chunks = np.asarray([a.chunk for a in group])
+            m0s = np.asarray([a.col_chunk for a in group]) * m_per_tile
+            m_subs = np.minimum(m0s + m_per_tile, m) - m0s
+            lay = HorizontalLayout(n_sub=n_c, m_sub=m_per_tile, q=q, p=p,
+                                   subarray_rows=geom.subarray_rows,
+                                   subarray_cols=cols)
+            # Only the layout's row prefix is ever touched — allocating the
+            # full 512 physical rows per bank would just zero dead pages.
+            bank = BankArray(T, rows=lay.rows_used, cols=cols,
+                             reliable_cols=rel)
+            # ---- load: weight bit-planes of the whole group at once -------
+            # Gather each tile's (n_c, m_per_tile) weight block; out-of-range
+            # output columns (ragged last column chunk) are masked to zero —
+            # exactly the empty bitlines the sequential loader leaves.
+            row_idx = chunks[:, None] * n_sub + np.arange(n_c)[None, :]
+            col_idx = m0s[:, None] + np.arange(m_per_tile)[None, :]
+            valid = col_idx < m                                # (T, m_per)
+            w_grp = w_u[row_idx[:, :, None],
+                        np.minimum(col_idx, m - 1)[:, None, :]].astype(np.uint8)
+            w_grp *= valid[:, None, :]                         # (T, n_c, m_per)
+            bits = (w_grp[..., None] >> q_arange.astype(np.uint8)) & 1
+            rows_block = np.zeros((T, n_c, cols), dtype=np.uint8)
+            rows_block[:, :, slot_cols] = bits.reshape(T, n_c, -1)
+            bank.host_write_row(lay.zero_row, np.zeros(cols, np.uint8))
+            bank.host_write_row(lay.one_row, np.ones(cols, np.uint8))
+            bank.host_write_rows(lay.matrix_rows, rows_block)
+            bank.host_write_rows(lay.inv_matrix_rows, 1 - rows_block)
+            pre_counts = bank.tile_counts()
+            bank.reset_counts()
+            # ---- compute: one batched ripple-carry per bit offset ---------
+            clear_accumulator(bank, lay)
+            group_bits = np.stack([chunk_bits[c] for c in chunks])  # (T,n_c,p)
+            matrix_block = rows_block.astype(np.int32)
+            acc_val = np.zeros((T, cols), dtype=np.int64)
+            for k in range(p):
+                zeros_k = None
+                if chunk_zero_adds[chunks[0]] is not None:
+                    zeros_k = np.asarray(
+                        [chunk_zero_adds[c][k] for c in chunks], np.int64)
+                acc_val = add_rows_batched_wave(
+                    bank, lay, group_bits[:, :, k], offset=k,
+                    n_zero_adds=zeros_k, matrix_block=matrix_block,
+                    acc_val=acc_val)
+            # ---- readout: row-wise aggregation, whole group at once -------
+            acc = bank.host_read_rows(lay.acc_rows).astype(np.int64)
+            weights_b = (1 << np.arange(lay.r, dtype=np.int64))[None, :, None]
+            col_vals = (acc * weights_b).sum(axis=1)           # (T, cols)
+            outs = (col_vals[:, slot_cols].reshape(T, m_per_tile, q)
+                    << q_shift).sum(axis=2)                    # (T, m_per)
+            bank.charge_host_int_ops(m_subs * q)
+            rt_counts = bank.tile_counts()
+            for ti, asg in enumerate(group):
+                m_sub = m_subs[ti]
+                partials[asg.chunk, m0s[ti]:m0s[ti] + m_sub] = outs[ti, :m_sub]
+                tile_pre[asg.tile] = pre_counts[ti]
+                tile_rt[asg.tile] = rt_counts[ti]
+    return partials, tile_rt, tile_pre
 
 
 def _gemv_tile_on_slots(w_tile, a_tile, q, p, sparsity, geom,

@@ -1,0 +1,96 @@
+"""Tile placement + wave scheduling across channels and banks (paper §VII).
+
+A GeMV is partitioned into (reduction_chunk, column_chunk) subarray tiles
+(`gemv.mvdram_gemv`). The DRAM rank executes `channels × banks_per_channel`
+subarrays concurrently; tiles beyond that capacity serialize in WAVES. This
+module owns the static placement:
+
+  tile t  →  channel  t mod C,  bank  (t div C) mod B,  wave  t div (C·B)
+
+i.e. round-robin over channels first (each channel has its own command bus),
+then over the banks of a channel, matching the §VII experimental setup of
+4 DDR4 modules × 16 concurrently-computing subarrays each. The wave count
+equals `timing.bank_waves` — the same ceil-division the analytic price model
+bills compute with — so simulated and analytic wave accounting reconcile
+(tested).
+
+`PudGeometry` lives here (the placement resources ARE the geometry);
+`gemv.py` re-exports it for compatibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+
+@dataclasses.dataclass(frozen=True)
+class PudGeometry:
+    """Physical resources available to one GeMV launch.
+
+    `subarray_cols` is the simulated width (kept small for tractability);
+    `real_cols` is the physical bitline count used by the cost model
+    (65,536 across the chips of a DDR4 rank, paper §II-B).
+    """
+
+    subarray_rows: int = 512
+    subarray_cols: int = 1024
+    real_cols: int = 65536
+    n_sub_max: int = 128          # paper §VII: N ≤ 128 per subarray
+    channels: int = 4             # four DDR4 modules (paper §VII)
+    banks_per_channel: int = 16   # concurrently computing subarrays / channel
+
+    @property
+    def parallel_tiles(self) -> int:
+        return self.channels * self.banks_per_channel
+
+
+@dataclasses.dataclass(frozen=True)
+class TileAssignment:
+    """One tile's slot in the rank: which subarray computes it, and when."""
+
+    tile: int        # linear index: chunk * col_chunks + col_chunk
+    chunk: int       # reduction chunk (rows j0..j1 of the matrix)
+    col_chunk: int   # column chunk (outputs m0..m1)
+    channel: int
+    bank: int
+    wave: int
+
+
+@dataclasses.dataclass(frozen=True)
+class WaveSchedule:
+    """Static placement of all tiles of one GeMV onto (channel, bank, wave)."""
+
+    n_chunks: int
+    col_chunks: int
+    geom: PudGeometry
+    assignments: tuple  # (tiles,) TileAssignment, in tile order
+
+    @property
+    def tiles(self) -> int:
+        return self.n_chunks * self.col_chunks
+
+    @property
+    def waves(self) -> int:
+        return math.ceil(self.tiles / self.geom.parallel_tiles)
+
+    def wave_members(self, wave: int) -> tuple:
+        lo = wave * self.geom.parallel_tiles
+        hi = min(lo + self.geom.parallel_tiles, self.tiles)
+        return self.assignments[lo:hi]
+
+
+def schedule_tiles(n_chunks: int, col_chunks: int,
+                   geom: PudGeometry) -> WaveSchedule:
+    """Round-robin §VII placement; tile order is chunk-major (the same order
+    the sequential oracle executes, so per-tile results line up 1:1)."""
+    asg = []
+    for t in range(n_chunks * col_chunks):
+        ci, mi = divmod(t, col_chunks)
+        slot = t // geom.channels
+        asg.append(TileAssignment(
+            tile=t, chunk=ci, col_chunk=mi,
+            channel=t % geom.channels,
+            bank=slot % geom.banks_per_channel,
+            wave=slot // geom.banks_per_channel))
+    return WaveSchedule(n_chunks=n_chunks, col_chunks=col_chunks, geom=geom,
+                        assignments=tuple(asg))

@@ -147,15 +147,35 @@ class PudCost:
         return d
 
 
+def bank_waves(tiles: int, geom: PudGeometry = PudGeometry()) -> int:
+    """Serialized execution waves: tiles round-robin over channels, then over
+    the banks of each channel (§VII placement, `schedule.schedule_tiles`).
+
+    Equals ceil(tiles / geom.parallel_tiles) — the wave count the simulator
+    reports in `TileReport.waves` (tested reconciliation).
+    """
+    tiles_per_channel = math.ceil(tiles / geom.channels)
+    return math.ceil(tiles_per_channel / geom.banks_per_channel)
+
+
+def simulated_wave_time(report, model: DDR4Model = DDR4_2400) -> float:
+    """Bank-bound compute time from the simulator's per-wave op maxima.
+
+    The simulated counterpart of `price_gemv`'s analytic t_bank: each wave is
+    bound by its slowest bank (`TileReport.wave_max`), waves serialize. At
+    matched geometry and dense activation bits the two are equal (tested).
+    """
+    return sum(c.pud_ops for c in report.wave_max) * model.t_op
+
+
 def price_gemv(cost: GemvCost, geom: PudGeometry = PudGeometry(),
                model: DDR4Model = DDR4_2400) -> PudCost:
     """Price an analytic GemvCost (MVDRAM or conventional PUD)."""
     ops_tile = cost.ops_per_tile.pud_ops
     tiles_per_channel = math.ceil(cost.tiles / geom.channels)
-    bank_waves = math.ceil(tiles_per_channel / geom.banks_per_channel)
     # Bank-serial: waves of ops at t_op. Bus-serial: every op of every tile on
     # the channel needs one AAP slot.
-    t_bank = bank_waves * ops_tile * model.t_op
+    t_bank = bank_waves(cost.tiles, geom) * ops_tile * model.t_op
     t_bus = tiles_per_channel * ops_tile * model.t_cmd
     t_compute = max(t_bank, t_bus)
     t_aggregate = (cost.aggregate_bits / 8) / model.agg_bw

@@ -5,10 +5,15 @@ template-selected vectorized executor, on the paper-representative 512×256
 q=4/p=4 shape — asserting the ≥20× acceptance floor and bit-identical
 outputs/OpCounts; (2) wave-parallel BankArray dispatch vs the sequential
 per-tile template path at banked geometry (256 tiles → 4 waves) — asserting
-the ≥5× acceptance floor, bit-identical outputs AND per-tile OpCounts; and
-(3) the MXU dots issued per tile by the bit-serial Pallas kernel's
-decomposed schedule vs the §V-D code-dot fast path (q·p vs q), plus
-measured interpret-mode wall-clock for both fidelities.
+the ≥5× acceptance floor, bit-identical outputs AND per-tile OpCounts;
+(3) cross-request wave sharing: one B=4 batched GeMV launch vs 4 sequential
+launches at the same banked geometry — asserting the ≥2× amortization
+floor, per-request outputs AND per-tile OpCounts bit-identical to the
+sequential oracle, and `price_gemv_batched`'s amortized weight staging
+reconciling with the simulator's shared-wave counts; and (4) the MXU dots
+issued per tile by the bit-serial Pallas kernel's decomposed schedule vs
+the §V-D code-dot fast path (q·p vs q), plus measured interpret-mode
+wall-clock for both fidelities.
 """
 from __future__ import annotations
 
@@ -18,7 +23,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bitplane import make_bitplane_weights
-from repro.core.pud.gemv import PudGeometry, mvdram_gemv
+from repro.core.pud.gemv import PudGeometry, mvdram_gemv, mvdram_gemv_cost
+from repro.core.pud.timing import price_gemv_batched
 from repro.core.quant import (QuantSpec, quantize_activations,
                               quantize_weights)
 from repro.kernels.bitplane_gemv import ops as bp
@@ -97,6 +103,65 @@ def sim_wave_vs_sequential(emit):
     assert speedup >= 5.0, f"speedup {speedup:.1f}x below the 5x floor"
 
 
+def sim_batched_wave_sharing(emit):
+    """Cross-request wave sharing: B=4 activation vectors against one
+    resident matrix in shared waves vs 4 independent sequential launches.
+    The per-wave weight staging happens once for the batch; outputs and
+    per-tile OpCounts of every request must be bit-identical to its
+    sequential-oracle run, and the analytic `price_gemv_batched` must
+    reconcile with the simulator's shared-wave staging counts."""
+    B = 4
+    rng = np.random.default_rng(3)
+    w = jnp.asarray(rng.normal(size=(N, M)), jnp.float32)
+    A = jnp.asarray(rng.normal(size=(B, N)), jnp.float32)
+    wq = quantize_weights(w, QuantSpec(bits=Q))
+    aqb = quantize_activations(A, QuantSpec(bits=P))
+    aqs = [quantize_activations(A[b], QuantSpec(bits=P)) for b in range(B)]
+
+    mvdram_gemv(aqb, wq, geom=BANKED)   # warm template/plan caches
+    mvdram_gemv(aqs[0], wq, geom=BANKED)
+    t_batch, (out_b, rep) = _best_of(
+        lambda: mvdram_gemv(aqb, wq, geom=BANKED))
+    t_seq, seq = _best_of(
+        lambda: [mvdram_gemv(a, wq, geom=BANKED) for a in aqs])
+
+    bit_identical = all(
+        np.array_equal(np.asarray(out_1), np.asarray(out_b[b]))
+        and [c.asdict() for c in rep_1.tile_runtime]
+            == [c.asdict() for c in rep.requests[b].tile_runtime]
+        and rep_1.runtime.asdict() == rep.requests[b].runtime.asdict()
+        and rep_1.preload.asdict() == rep.requests[b].preload.asdict()
+        for b, (out_1, rep_1) in enumerate(seq))
+
+    # analytic shared-wave pricing reconciles with the simulated counts
+    cost = mvdram_gemv_cost(M, N, Q, P, geom=BANKED,
+                            usable_cols=BANKED.subarray_cols)
+    priced = price_gemv_batched(cost, B, geom=BANKED)
+    staging_match = (rep.shared_preload.host_bits_written
+                     == cost.weight_load_bits == priced.weight_load_bits)
+    # non-tautological: the batch ledger must equal the INDEPENDENT
+    # sequential-oracle runs' command totals
+    runtime_match = rep.runtime.pud_ops == sum(
+        r1.runtime.pud_ops for (_o, r1) in seq)
+
+    amortization = t_seq / t_batch
+    emit("sim.sequential_b4_banked_512x256_q4p4_ms", t_seq * 1e3)
+    emit("sim.batched_b4_banked_512x256_q4p4_ms", t_batch * 1e3)
+    emit("sim.batch_amortization_x", amortization,
+         f"bit_identical={bit_identical} waves={rep.waves} "
+         f"shared_preload_bits={rep.shared_preload.host_bits_written} "
+         f"amortized_bits={rep.amortized_preload_bits}")
+    emit("sim.batch_price_amortization_x", priced.amortization,
+         f"staging_match={staging_match} runtime_match={runtime_match}")
+    assert bit_identical, "batched GeMV diverged from the sequential oracle"
+    assert staging_match, "analytic weight staging != simulated shared counts"
+    assert runtime_match, "batch runtime != sum of per-request runtimes"
+    assert rep.waves == 4, f"expected 4 waves, got {rep.waves}"
+    assert rep.schedule.reuse_factor == B
+    assert amortization >= 2.0, \
+        f"amortization {amortization:.2f}x below the 2x floor"
+
+
 def kernel_dots_issued(emit):
     rng = np.random.default_rng(1)
     w = jnp.asarray(rng.normal(size=(N, M)), jnp.float32)
@@ -125,4 +190,5 @@ def kernel_dots_issued(emit):
     assert rel <= 1e-4
 
 
-ALL = [sim_vectorized_vs_naive, sim_wave_vs_sequential, kernel_dots_issued]
+ALL = [sim_vectorized_vs_naive, sim_wave_vs_sequential,
+       sim_batched_wave_sharing, kernel_dots_issued]

@@ -105,6 +105,19 @@ def from_quantized(qt: QuantizedTensor) -> BitplaneWeights:
                            n=qt.values.shape[0], spec=qt.spec)
 
 
+def to_quantized(bw: BitplaneWeights) -> QuantizedTensor:
+    """Exact inverse of `from_quantized`: recover the (N, M) unsigned codes
+    from the packed planes (bit-exact round trip, tested). Lets a consumer
+    that only holds the packed serving representation — e.g. `ServeEngine`'s
+    quantized leaves — register with the PUD simulator, which executes on
+    raw codes."""
+    planes = unpack_bitplanes(bw.planes, bw.n).astype(jnp.uint32)  # (q, N, M)
+    shifts = jnp.arange(bw.bits, dtype=jnp.uint32).reshape(-1, 1, 1)
+    codes = jnp.sum(planes << shifts, axis=0).astype(jnp.uint8)
+    return QuantizedTensor(values=codes, scale=bw.scale, zero=bw.zero,
+                           spec=bw.spec, col_sum=bw.col_sum)
+
+
 # ---------------------------------------------------------------------------
 # Reference GeMV paths (oracles)
 # ---------------------------------------------------------------------------

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .bitplane import (BitplaneWeights, bitplane_gemv_bitserial,
-                       bitplane_gemv_f32, from_quantized)
+                       bitplane_gemv_f32, from_quantized, to_quantized)
 from .pud.gemv import (CommandTemplates, GemvCost, PudGeometry,
                        build_templates, conventional_pud_cost, mvdram_gemv,
                        mvdram_gemv_cost)
@@ -65,6 +65,13 @@ class PartitionPlan:
         one §VII placement."""
         sched = schedule_tiles(self.n_chunks, self.col_chunks, geom)
         return [(a.channel, a.bank, a.wave) for a in sched.assignments]
+
+
+def _pallas_impl() -> str:
+    """Kernel backend for mode="pallas": the real TPU kernel on TPU, the
+    interpret-mode kernel body elsewhere (single source of truth for the
+    engine's gemv() and serving linear())."""
+    return "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
 
 
 def make_plan(m: int, n: int, q: int, p: int,
@@ -111,6 +118,7 @@ class MVDRAMEngine:
         self.gpu = gpu
         self.sparsity = sparsity
         self.handles: dict[str, GemvHandle] = {}
+        self.routed_linears = 0   # serving linears traced through linear()
 
     # -- step ①: weights into "DRAM" -----------------------------------------
 
@@ -120,10 +128,26 @@ class MVDRAMEngine:
         and the static command templates (quantize ONCE — the packed planes
         are derived from the same codes the simulator executes on)."""
         wq = quantize_weights(w, w_spec)
-        bw = from_quantized(wq)
+        return self._install(name, from_quantized(wq), wq, a_spec)
+
+    def register_packed(self, name: str, bw: BitplaneWeights,
+                        a_spec: Optional[QuantSpec] = None) -> GemvHandle:
+        """Register an ALREADY-PACKED (N, M) weight leaf (e.g. a serving
+        engine's `BitplaneWeights`): the simulator's raw codes are recovered
+        by the exact `to_quantized` round trip, so no re-quantization — the
+        sim, jnp and pallas backends all execute the same codes."""
+        if bw.planes.ndim != 3:
+            raise ValueError(
+                "register_packed takes a 2-D weight leaf (packed planes "
+                "(q, N//32, M)); stacked expert leaves are served per-expert")
+        return self._install(name, bw, to_quantized(bw), a_spec)
+
+    def _install(self, name: str, bw: BitplaneWeights, wq: QuantizedTensor,
+                 a_spec: Optional[QuantSpec]) -> GemvHandle:
+        """Shared tail of both registration entries: one plan/template/
+        handle construction so the sim and kernel paths can't diverge."""
         p = a_spec.bits if a_spec is not None else 16
-        plan = make_plan(m=w.shape[1], n=w.shape[0], q=w_spec.bits, p=p,
-                         geom=self.geom)
+        plan = make_plan(m=bw.m, n=bw.n, q=bw.bits, p=p, geom=self.geom)
         templates = (build_templates(plan.n_sub, p)
                      if a_spec is not None else None)
         h = GemvHandle(name=name, weights=bw, wq=wq, plan=plan, a_spec=a_spec,
@@ -136,11 +160,19 @@ class MVDRAMEngine:
     def gemv(self, handle: GemvHandle | str, a: jax.Array,
              mode: str = "jnp", fidelity: str = "code",
              naive: bool = False, wave: Optional[bool] = None):
-        """`fidelity` selects the Pallas bit-serial schedule ("code" = q dots
+        """Execute the registered GeMV on a (N,) activation vector or a
+        (B, N) lane batch — all three backends take the batch axis:
+
+          jnp/pallas  the batched kernel grid (one launch, B rows)
+          sim         the shared-wave path (`mvdram_gemv_batched`): weight
+                      rows staged once per wave, B command streams ride the
+                      batch axis; returns ((B, M), BatchReport)
+
+        `fidelity` selects the Pallas bit-serial schedule ("code" = q dots
         via the §V-D linearity collapse, "bitserial" = decomposed q·p);
         `naive=True` runs the sim micro-op by micro-op (the oracle); `wave`
         toggles the sim's wave-parallel BankArray dispatch (default on when
-        not naive)."""
+        not naive). Both oracles are single-vector only."""
         h = self.handles[handle] if isinstance(handle, str) else handle
         if mode == "jnp":
             if h.a_spec is None:
@@ -149,8 +181,7 @@ class MVDRAMEngine:
             return bitplane_gemv_bitserial(aq, h.weights)
         if mode == "pallas":
             from ..kernels.bitplane_gemv import ops as bp_ops
-            impl = ("pallas" if jax.default_backend() == "tpu"
-                    else "pallas_interpret")
+            impl = _pallas_impl()
             if h.a_spec is None:
                 return bp_ops.bitplane_gemv(a, h.weights, impl=impl)
             return bp_ops.bitplane_gemv_bitserial(a, h.weights, h.a_spec,
@@ -159,13 +190,48 @@ class MVDRAMEngine:
         if mode == "sim":
             if h.a_spec is None:
                 raise ValueError("PUD simulation needs quantized activations")
-            assert a.ndim == 1, "sim backend is GeMV-only"
+            if a.ndim not in (1, 2):
+                raise ValueError(
+                    f"sim backend takes a (N,) vector or a (B, N) lane "
+                    f"batch, got shape {tuple(a.shape)}")
             aq = quantize_activations(a, h.a_spec)
             out, report = mvdram_gemv(aq, h.wq, sparsity=self.sparsity,
                                       geom=self.geom, naive=naive,
                                       templates=h.templates, wave=wave)
             return jnp.asarray(out), report
         raise ValueError(f"unknown mode {mode!r}")
+
+    # -- serving-side routing --------------------------------------------------
+
+    def linear(self, x: jax.Array, w: BitplaneWeights,
+               act_bits: Optional[int] = None, mode: str = "jnp"):
+        """One lane-batched quantized linear, routed through the engine.
+
+        This is the entry `models.layers.dense` calls (via `EngineLinear`)
+        for every `BitplaneWeights` leaf when a `ServeEngine` owns an
+        MVDRAM engine: x (..., N) — typically the (lanes, N) decode batch —
+        executes as ONE batched GeMV launch per weight. jit-safe for
+        jnp/pallas; `mode="sim"` additionally requires concrete values and
+        a 2-D x (the shared-wave simulator path, for audits)."""
+        from ..kernels.bitplane_gemv import ops as bp_ops
+        self.routed_linears += 1
+        if mode == "sim":
+            if not act_bits:
+                raise ValueError(
+                    "the sim audit route executes bit-serial command "
+                    "streams — float-activation linears need act_bits")
+            # cache key carries act_bits: the same leaf served at different
+            # activation precisions gets distinct registrations
+            name = f"_linear_{id(w)}_{act_bits}"
+            if name not in self.handles:
+                self.register_packed(name, w, QuantSpec(bits=act_bits))
+            out, _report = self.gemv(name, x, mode="sim")
+            return out
+        impl = _pallas_impl() if mode == "pallas" else mode
+        if act_bits:
+            return bp_ops.bitplane_gemv_bitserial(
+                x, w, QuantSpec(bits=act_bits), impl=impl)
+        return bp_ops.bitplane_gemv(x, w, impl=impl)
 
     # -- pricing (paper-faithful DDR4 numbers) --------------------------------
 
@@ -196,3 +262,22 @@ class MVDRAMEngine:
         h = self.handles[handle] if isinstance(handle, str) else handle
         bw = h.weights
         return int(bw.planes.size * 4 + bw.scale.size * 4 + bw.col_sum.size * 4)
+
+
+class EngineLinear:
+    """Routes `models.layers.dense`'s BitplaneWeights branch through an
+    `MVDRAMEngine` — the hook `ServeEngine` installs so every lane-batched
+    quantized linear of the serving model executes as one engine-batched
+    GeMV launch.
+
+    Passed wherever a `dense(..., impl=...)` string goes; call sites that
+    need a plain backend string (e.g. the vmap'd per-expert MoE path) read
+    `.mode` instead. jit-compatible: `engine.linear` is pure in (x, w)."""
+
+    def __init__(self, engine: MVDRAMEngine, mode: str = "jnp"):
+        self.engine = engine
+        self.mode = mode
+
+    def __call__(self, x: jax.Array, w: BitplaneWeights,
+                 act_bits: Optional[int] = None) -> jax.Array:
+        return self.engine.linear(x, w, act_bits=act_bits, mode=self.mode)

@@ -11,9 +11,12 @@
 """
 from .device import BankArray, Subarray, OpCounts
 from .layout import HorizontalLayout, horizontal_capacity_report
-from .schedule import PudGeometry, TileAssignment, WaveSchedule, schedule_tiles
-from .gemv import (CommandTemplates, TemplatePlan, build_templates,
-                   conventional_pud_cost, mvdram_gemv, mvdram_gemv_subarray,
+from .schedule import (BatchSchedule, PudGeometry, TileAssignment,
+                       WaveSchedule, schedule_batch, schedule_tiles)
+from .gemv import (BatchReport, CommandTemplates, TemplatePlan,
+                   build_templates, conventional_pud_cost, mvdram_gemv,
+                   mvdram_gemv_batched, mvdram_gemv_subarray,
                    select_templates)
-from .timing import (DDR4Model, CpuBaseline, GpuBaseline, PudCost,
-                     TPU_V5E, DDR4_2400, bank_waves, simulated_wave_time)
+from .timing import (BatchedPudCost, DDR4Model, CpuBaseline, GpuBaseline,
+                     PudCost, TPU_V5E, DDR4_2400, bank_waves,
+                     price_gemv_batched, simulated_wave_time)

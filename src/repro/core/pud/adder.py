@@ -14,8 +14,6 @@ MAJX destroys its inputs (all activated rows are overwritten with the
 result), so operands are first RowCopied into scratch rows; the scratch rows
 then hold the result, which is RowCopied to its destination.
 
-Two execution granularities share the same command accounting:
-
 Three execution granularities share the same command accounting:
 
   `add_row_at_offset`       one add, micro-op by micro-op (the naive oracle —
@@ -175,12 +173,47 @@ def add_rows_batched(sub: Subarray, lay: HorizontalLayout,
 # Wave-parallel execution (all banks of a wave advance in one numpy step)
 # ---------------------------------------------------------------------------
 
+def write_accumulator_wave(bank: BankArray, lay: HorizontalLayout,
+                           acc_val: np.ndarray) -> None:
+    """Materialize the running accumulator VALUE into the accumulator rows
+    (+ complement track) of every bank of the wave.
+
+    Callers issuing all p bit offsets pass `write_bits=False` to
+    `add_rows_batched_wave` and flush once here: the intermediate row states
+    are never observed (outputs read only the final accumulator), so one
+    decode+write replaces p of them. On non-reliable columns the rows keep
+    their prior bits, exactly like the per-offset writes (never read out).
+
+    Batched acc_val (B, tiles, cols): the B requests time-share the physical
+    rows, so the LAST request's accumulator is the state the bank is left
+    in — that is what gets materialized.
+    """
+    if acc_val.ndim == 3:
+        acc_val = acc_val[-1]       # the bank's final time-shared occupant
+    acc_idx = np.asarray(lay.acc_rows)
+    acc_c_idx = np.asarray(lay.acc_c_rows)
+    # r ≤ 16 for any legal layout, so decode in int32 (half the traffic)
+    new_bits = ((acc_val.astype(np.int32)[..., None, :]
+                 >> np.arange(lay.r, dtype=np.int32)[:, None]) & 1
+                ).astype(np.uint8)
+    if bank.all_reliable:
+        bank.data[..., acc_idx, :] = new_bits
+        bank.data[..., acc_c_idx, :] = 1 - new_bits
+    else:
+        rel = bank.reliable
+        bank.data[..., acc_idx, :] = np.where(
+            rel, new_bits, bank.data[..., acc_idx, :])
+        bank.data[..., acc_c_idx, :] = np.where(
+            rel, 1 - new_bits, bank.data[..., acc_c_idx, :])
+
+
 def add_rows_batched_wave(bank: BankArray, lay: HorizontalLayout,
                           masks: np.ndarray, offset: int,
                           n_zero_adds: np.ndarray | None = None,
                           matrix_block: np.ndarray | None = None,
-                          acc_val: np.ndarray | None = None) -> np.ndarray:
-    """Accumulator[t] += Σ_j masks[t, j]·(matrix row j of tile t) << offset,
+                          acc_val: np.ndarray | None = None,
+                          write_bits: bool = True) -> np.ndarray:
+    """Accumulator[t] += Σ_j masks[…, t, j]·(matrix row j of tile t) << offset,
     for every tile t of the wave at once.
 
     `masks` is the (tiles, n_sub) boolean popcount selection — tiles from
@@ -190,41 +223,55 @@ def add_rows_batched_wave(bank: BankArray, lay: HorizontalLayout,
     per-tile command charges are exactly `add_rows_batched` applied to each
     tile (tested equivalence, outputs AND OpCounts).
 
-    `n_zero_adds[t]` bills tile t's conventional zero-row adds when the
-    bit-sparsity optimization is disabled. `matrix_block` (the int64 matrix
-    rows, static during compute) and `acc_val` (the running (tiles, cols)
-    accumulator value, column-wise identical to decoding the accumulator
-    rows) let a caller issuing all p offsets skip re-reading bank state;
-    returns the updated accumulator value either way.
+    Cross-request wave sharing: on a `BankArray(batch=B)` the masks carry a
+    leading batch axis (B, tiles, n_sub) — B activation vectors' popcount
+    selections against the SAME resident weight rows (loaded once; the
+    requests time-share the bank). One broadcast matmul then advances all
+    B×tiles accumulator values, each (request, tile) billed for its own
+    popcount; the weight rows themselves are never re-read or re-copied per
+    request, and the physical accumulator rows materialize the last
+    request's state (`write_accumulator_wave`).
+
+    `n_zero_adds[…, t]` bills conventional zero-row adds when the
+    bit-sparsity optimization is disabled. `matrix_block` (the (tiles, n_sub,
+    cols) int matrix rows, static during compute and SHARED across the batch)
+    and `acc_val` (the running (…, tiles, cols) accumulator value,
+    column-wise identical to decoding the accumulator rows) let a caller
+    issuing all p offsets skip re-reading bank state; returns the updated
+    accumulator value either way. `write_bits=False` additionally defers the
+    row materialization — the caller must finish with
+    `write_accumulator_wave` so the bank rows hold the final state.
     """
-    masks = np.asarray(masks, dtype=bool)
+    masks = np.asarray(masks)   # bool, or a pre-cast 0/1 integer selection
     chain_len = lay.r - offset
-    acc_idx = np.asarray(lay.acc_rows)
+    n_adds = masks.sum(axis=-1, dtype=np.int64)
     if acc_val is None:
-        weights = (1 << np.arange(lay.r, dtype=np.int64))[None, :, None]
-        acc_val = (bank.data[:, acc_idx].astype(np.int64)
-                   * weights).sum(axis=1)                       # (T, cols)
-    if masks.any():
+        acc_idx = np.asarray(lay.acc_rows)
+        weights = (1 << np.arange(lay.r, dtype=np.int64))[:, None]
+        acc_val = (bank.data[..., acc_idx, :].astype(np.int64)
+                   * weights).sum(axis=-2)                      # (T, cols)
+        if masks.ndim == 3:
+            # batched masks over the shared rows: every request starts from
+            # the same decoded accumulator state, on its own batch lane
+            acc_val = np.broadcast_to(
+                acc_val, masks.shape[:1] + acc_val.shape).copy()
+    if n_adds.any():
         if matrix_block is None:
-            matrix_block = bank.data[:, lay.matrix_rows].astype(np.int32)
-        addend = np.matmul(masks[:, None, :].astype(matrix_block.dtype),
-                           matrix_block)[:, 0].astype(np.int64) << offset
-        acc_val = (acc_val + addend) & ((1 << lay.r) - 1)
-        # r ≤ 16 for any legal layout, so decode in int32 (half the traffic)
-        new_bits = ((acc_val.astype(np.int32)[:, None, :]
-                     >> np.arange(lay.r, dtype=np.int32)[None, :, None]) & 1
-                    ).astype(np.uint8)
-        acc_c_idx = np.asarray(lay.acc_c_rows)
-        if bank.all_reliable:
-            bank.data[:, acc_idx] = new_bits
-            bank.data[:, acc_c_idx] = 1 - new_bits
+            # (tiles, n_sub, cols) resident rows — batch-invariant by design.
+            # float32 so the popcount matmul runs through BLAS: every entry
+            # is a sum of ≤ n_sub ≤ 512 0/1 products, exact far below 2^24.
+            matrix_block = bank.data[..., lay.matrix_rows, :].astype(np.float32)
+        mm = (masks if masks.dtype == matrix_block.dtype
+              else masks.astype(matrix_block.dtype))
+        if mm.ndim == 3:   # batched (B, T, n): one BLAS batch per tile
+            prod = np.matmul(mm.transpose(1, 0, 2), matrix_block)  # (T, B, c)
+            addend = prod.astype(np.int64).transpose(1, 0, 2) << offset
         else:
-            rel = bank.reliable[None, None, :]
-            bank.data[:, acc_idx] = np.where(rel, new_bits,
-                                             bank.data[:, acc_idx])
-            bank.data[:, acc_c_idx] = np.where(rel, 1 - new_bits,
-                                               bank.data[:, acc_c_idx])
-    n_adds = masks.sum(axis=1, dtype=np.int64)
+            addend = np.matmul(mm[..., None, :],
+                               matrix_block)[..., 0, :].astype(np.int64) << offset
+        acc_val = (acc_val + addend) & ((1 << lay.r) - 1)
+        if write_bits:
+            write_accumulator_wave(bank, lay, acc_val)
     if n_zero_adds is not None:
         n_adds = n_adds + np.asarray(n_zero_adds, dtype=np.int64)
     bank.charge_adds(adder_cost(chain_len), n_adds)

@@ -113,42 +113,61 @@ class BankArray:
     run benchmark shapes in a handful of waves instead of hundreds of
     sequential tiles.
 
+    Cross-request wave sharing: with `batch=B` the array models B activation
+    vectors executed against the SAME resident weight rows. The physical bit
+    state stays (tiles, rows, cols) — in real hardware the B per-request
+    command streams TIME-SHARE each bank back-to-back within the wave slot,
+    so at any instant one request's accumulator occupies the rows and the
+    weight rows are loaded exactly once (the amortization MVDRAM's
+    data-sharing argument promises; `host_write_row(s)` traffic is charged
+    once accordingly). The per-request accumulator VALUES ride a (batch,
+    tiles, cols) arithmetic track during execution
+    (`adder.add_rows_batched_wave`), broadcast in single numpy steps; the
+    LAST request's accumulator is what the rows materialize — exactly the
+    state the time-shared bank is left in. Only the command LEDGER grows the
+    batch axis: data-dependent compute streams are billed per (request,
+    tile), while broadcast commands appear in every request's view.
+
     Command accounting is split into a `shared` OpCounts (broadcast ops every
     tile executes — RowCopy/MAJX/uniform host traffic) plus a vectorized
     per-tile ledger (data-dependent add streams differ per tile via popcount
-    selection); `tile_counts()` materializes the per-tile totals, which are
-    identical to what the sequential per-tile oracle counts (tested).
+    selection); `tile_counts()` materializes the per-tile totals — per
+    (request, tile) when batched — which are identical to what the
+    sequential per-tile oracle counts (tested).
     """
 
     # per-tile ledger columns (the only fields that vary within a wave)
     _RC, _M3, _M5, _HI = range(4)
 
     def __init__(self, tiles: int, rows: int = 512, cols: int = 1024,
-                 reliable_cols: np.ndarray | None = None):
+                 reliable_cols: np.ndarray | None = None,
+                 batch: int | None = None):
         self.tiles = tiles
         self.rows = rows
         self.cols = cols
+        self.batch = batch
+        lead = () if batch is None else (batch,)
         self.data = np.zeros((tiles, rows, cols), dtype=np.uint8)
         self.reliable = (np.ones(cols, dtype=bool) if reliable_cols is None
                          else reliable_cols.astype(bool))
         self.all_reliable = bool(self.reliable.all())
         self.shared = OpCounts()
-        self.extra = np.zeros((tiles, 4), dtype=np.int64)
+        self.extra = np.zeros(lead + (tiles, 4), dtype=np.int64)
 
     # -- broadcast PUD primitives (one command, all banks of the wave) -------
 
     def row_copy(self, src: int, dst: int) -> None:
-        self.data[:, dst] = self.data[:, src]
+        self.data[..., dst, :] = self.data[..., src, :]
         self.shared.row_copy += 1
 
     def majx(self, rows: list[int]) -> None:
         x = len(rows)
         assert x % 2 == 1 and x >= 3, "MAJX needs an odd row count >= 3"
-        votes = self.data[:, rows].sum(axis=1)
+        votes = self.data[..., rows, :].sum(axis=-2)
         result = (votes > x // 2).astype(np.uint8)
-        out = np.where(self.reliable[None, :], result, self.data[:, rows[0]])
+        out = np.where(self.reliable, result, self.data[..., rows[0], :])
         for r in rows:
-            self.data[:, r] = out
+            self.data[..., r, :] = out
         if x == 3:
             self.shared.maj3 += 1
         elif x == 5:
@@ -159,48 +178,75 @@ class BankArray:
     # -- host access (per-bank data bus; traffic uniform across the wave) ----
 
     def host_write_row(self, row: int, bits: np.ndarray) -> None:
-        """Broadcast one (cols,) row to every tile (constant rows)."""
+        """Broadcast one (cols,) row to every tile (constant rows); in batched
+        mode the write also broadcasts across requests and is charged once —
+        the physical row is loaded a single time."""
         assert bits.shape == (self.cols,)
-        self.data[:, row] = bits.astype(np.uint8)[None, :]
+        self.data[..., row, :] = bits.astype(np.uint8)
         self.shared.host_bits_written += self.cols
 
     def host_write_rows(self, rows_idx, bits: np.ndarray) -> None:
-        """Per-tile block write: bits is (tiles, len(rows_idx), cols)."""
+        """Per-tile block write: bits is (tiles, len(rows_idx), cols). In
+        batched mode the block (the weight rows) broadcasts across requests
+        and its bus traffic is charged ONCE — this is the shared-wave
+        RowCopy/write amortization."""
         rows_idx = np.asarray(rows_idx)
         assert bits.shape == (self.tiles, rows_idx.shape[0], self.cols)
-        self.data[:, rows_idx] = bits.astype(np.uint8)
+        self.data[..., rows_idx, :] = bits.astype(np.uint8)
         self.shared.host_bits_written += rows_idx.shape[0] * self.cols
 
     def host_read_rows(self, rows_idx) -> np.ndarray:
-        """(tiles, len(rows_idx), cols) block read (output aggregation)."""
+        """(…, tiles, len(rows_idx), cols) block read (output aggregation)."""
         rows_idx = np.asarray(rows_idx)
-        self.shared.host_bits_read += rows_idx.shape[0] * self.cols
-        return self.data[:, rows_idx].copy()
+        self.charge_host_read(rows_idx)
+        return self.data[..., rows_idx, :].copy()
+
+    def charge_host_read(self, rows_idx) -> None:
+        """Bill the readout traffic of a row block without materializing the
+        copy — for callers whose VALUES come from the arithmetic track (the
+        batched executor) while the bus charge is identical."""
+        self.shared.host_bits_read += np.asarray(rows_idx).shape[0] * self.cols
 
     # -- accounting ----------------------------------------------------------
 
     def charge_adds(self, per_add: OpCounts, n_adds: np.ndarray) -> None:
-        """Bill `n_adds[t]` copies of a static add template to each tile —
-        one vectorized ledger update for the whole wave."""
-        self.extra[:, self._RC] += per_add.row_copy * n_adds
-        self.extra[:, self._M3] += per_add.maj3 * n_adds
-        self.extra[:, self._M5] += per_add.maj5 * n_adds
+        """Bill `n_adds[…, t]` copies of a static add template to each tile
+        (each (request, tile) when batched) — one vectorized ledger update
+        for the whole wave."""
+        self.extra[..., self._RC] += per_add.row_copy * n_adds
+        self.extra[..., self._M3] += per_add.maj3 * n_adds
+        self.extra[..., self._M5] += per_add.maj5 * n_adds
 
     def charge_host_int_ops(self, n_per_tile: np.ndarray) -> None:
-        """Bill aggregation arithmetic: (tiles,) host integer op counts."""
-        self.extra[:, self._HI] += n_per_tile
+        """Bill aggregation arithmetic: (tiles,) host integer op counts
+        (broadcast across the batch axis when batched — every request reads
+        its own outputs back)."""
+        self.extra[..., self._HI] += n_per_tile
 
-    def tile_counts(self) -> list[OpCounts]:
-        s = self.shared
-        return [OpCounts(row_copy=s.row_copy + int(e[self._RC]),
-                         maj3=s.maj3 + int(e[self._M3]),
-                         maj5=s.maj5 + int(e[self._M5]),
-                         majx_other=s.majx_other,
-                         host_bits_written=s.host_bits_written,
-                         host_bits_read=s.host_bits_read,
-                         host_int_ops=s.host_int_ops + int(e[self._HI]))
-                for e in self.extra]
+    # ledger column ↔ OpCounts field, in _RC/_M3/_M5/_HI order
+    _LEDGER_FIELDS = ("row_copy", "maj3", "maj5", "host_int_ops")
+
+    def counts_matrix(self) -> np.ndarray:
+        """Per-tile totals as a (…, tiles, len(_COUNT_FIELDS)) int64 matrix
+        in `_COUNT_FIELDS` order — the array-native form the GeMV executor
+        aggregates without materializing per-tile OpCounts objects."""
+        base = np.array([getattr(self.shared, f) for f in _COUNT_FIELDS],
+                        dtype=np.int64)
+        out = np.broadcast_to(
+            base, self.extra.shape[:-1] + (len(_COUNT_FIELDS),)).copy()
+        for col, fname in enumerate(self._LEDGER_FIELDS):
+            out[..., _COUNT_FIELDS.index(fname)] += self.extra[..., col]
+        return out
+
+    def tile_counts(self):
+        """Per-tile totals: (tiles,) list, or (batch, tiles) nested lists in
+        batched mode. Shared broadcast commands appear in EVERY view — each
+        request's per-tile counts equal the sequential oracle's (tested)."""
+        cm = self.counts_matrix()
+        if self.batch is None:
+            return [OpCounts(*row) for row in cm.tolist()]
+        return [[OpCounts(*row) for row in b] for b in cm.tolist()]
 
     def reset_counts(self) -> None:
         self.shared = OpCounts()
-        self.extra = np.zeros((self.tiles, 4), dtype=np.int64)
+        self.extra = np.zeros_like(self.extra)

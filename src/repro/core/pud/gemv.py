@@ -52,6 +52,20 @@ OpCounts are bit-identical to the retained sequential per-tile path
 (`wave=False`, the oracle), and the per-wave op maxima recorded in
 `TileReport.wave_max` reconcile with the analytic bank-wave math of
 `timing.price_gemv` (tested).
+
+Cross-request wave sharing: weights stay resident in DRAM while only
+activations change (paper §IV–V), so B activation vectors against one
+registered matrix execute in SHARED waves. `mvdram_gemv` accepts (B, N)
+activation codes (or call `mvdram_gemv_batched` directly): the B requests'
+tile grids are co-scheduled on one set of (channel, bank, wave) slots
+(`schedule.schedule_batch`, RACAM-style reuse-aware mapping), each wave's
+weight rows are gathered and RowCopied ONCE, and the per-offset
+ripple-carries broadcast over a (batch, tiles, rows, cols) `BankArray`.
+Outputs and per-tile OpCounts of every request are bit-identical to B
+sequential `mvdram_gemv` calls (the per-request oracle, tested);
+`BatchReport` additionally records the SHARED accounting — weight staging
+counted once, per-wave maxima over the summed per-request streams — which
+`timing.price_gemv_batched` reconciles with.
 """
 from __future__ import annotations
 
@@ -63,13 +77,13 @@ from typing import Optional
 import numpy as np
 
 from ..quant import QuantizedTensor
-from .adder import (add_row_at_offset, add_rows_batched,
-                    add_rows_batched_wave, adder_cost, clear_accumulator)
+from .adder import (add_row_at_offset, add_rows_batched, adder_cost,
+                    clear_accumulator, write_accumulator_wave)
 from .device import _COUNT_FIELDS, BankArray, OpCounts, Subarray
 from .layout import (HorizontalLayout, VerticalLayout,
                      accumulator_width)
-from .schedule import (PudGeometry, WaveSchedule,  # noqa: F401 (re-export)
-                       schedule_tiles)
+from .schedule import (BatchSchedule, PudGeometry,  # noqa: F401 (re-export)
+                       WaveSchedule, schedule_batch, schedule_tiles)
 
 
 # ---------------------------------------------------------------------------
@@ -362,6 +376,52 @@ class TileReport:
     tile_preload: tuple = ()
 
 
+@dataclasses.dataclass
+class BatchReport:
+    """Shared-wave accounting for one batched launch of B GeMVs.
+
+    `requests[b]` is a full per-request `TileReport`, bit-identical —
+    outputs AND per-tile OpCounts — to what `mvdram_gemv` reports for
+    request b alone (the sequential oracle, tested). The batch-level fields
+    record the PHYSICAL shared execution instead:
+
+      shared_preload   weight/constant staging summed over tiles, counted
+                       ONCE — the co-schedule loads each wave's weight rows
+                       a single time for all B requests.
+      runtime          Σ_b per-request runtime: the B data-dependent command
+                       streams time-share each bank within its wave slot.
+      wave_max[w]      max over wave w's tiles of the B-summed per-tile ops —
+                       the slowest bank bounds the shared wave
+                       (`timing.simulated_wave_time` prices this directly,
+                       reconciling with `timing.price_gemv_batched`).
+    """
+
+    batch: int
+    schedule: BatchSchedule
+    requests: tuple            # (B,) TileReport
+    shared_preload: OpCounts
+    runtime: OpCounts
+    wave_max: tuple
+
+    @property
+    def tiles(self) -> int:
+        return self.schedule.tiles
+
+    @property
+    def waves(self) -> int:
+        return self.schedule.waves
+
+    @property
+    def unshared_preload(self) -> OpCounts:
+        """Staging traffic B independent passes would pay."""
+        return self.shared_preload.scaled(self.batch)
+
+    @property
+    def amortized_preload_bits(self) -> int:
+        """DRAM-write bits the wave sharing saved vs B sequential passes."""
+        return (self.batch - 1) * self.shared_preload.host_bits_written
+
+
 def mvdram_gemv(aq: QuantizedTensor, wq: QuantizedTensor,
                 sparsity: bool = True,
                 geom: PudGeometry = PudGeometry(),
@@ -384,58 +444,48 @@ def mvdram_gemv(aq: QuantizedTensor, wq: QuantizedTensor,
     waves of the §VII channel/bank placement advance through one `BankArray`
     numpy step. `wave=False` runs the retained sequential per-tile path —
     the bit-exact oracle for outputs AND per-tile OpCounts.
+
+    Batched entry: 2-D (B, N) activation codes dispatch to
+    `mvdram_gemv_batched` — B requests in shared waves, returning a
+    ((B, M) f32, `BatchReport`) pair.
     """
+    a_u = np.asarray(aq.values, dtype=np.uint32)
+    if a_u.ndim == 2:
+        if naive or wave is False:
+            raise ValueError(
+                "batched GeMV executes shared waves only; the per-request "
+                "oracle is B separate mvdram_gemv calls (naive/wave=False)")
+        return mvdram_gemv_batched(aq, wq, sparsity=sparsity, geom=geom,
+                                   reliable_cols=reliable_cols,
+                                   templates=templates)
+    if a_u.ndim != 1:
+        raise ValueError(
+            f"GeMV takes a (N,) activation vector or a (B, N) batch, got "
+            f"ndim={a_u.ndim}")
     if wave is None:
         wave = not naive
     if wave and naive:
         raise ValueError("the naive micro-op oracle is per-tile only; "
                          "use wave=False (or omit wave) with naive=True")
-    a_u = np.asarray(aq.values, dtype=np.uint32)
     w_u = np.asarray(wq.values, dtype=np.uint32)
-    assert a_u.ndim == 1, "GeMV takes a single activation vector"
     n, m = w_u.shape
     q, p = wq.spec.bits, aq.spec.bits
-    n_sub = min(geom.n_sub_max, n)
-    n_chunks = math.ceil(n / n_sub)
-    g = wq.scale.shape[0]
-    if n % g:
-        raise ValueError(
-            f"weight scale groups must tile the reduction dim: N={n} is not "
-            f"divisible by G={g} groups (group_size must divide N)")
-    gs = n // g
-    if g > 1 and gs % n_sub:
-        raise ValueError(f"group size {gs} must be a multiple of n_sub {n_sub}")
+    n_sub, n_chunks, gs, g = _partition_checks(n, wq, geom)
 
-    if reliable_cols is not None:
-        slots = usable_output_slots(reliable_cols[:geom.subarray_cols], q)
-    else:
-        slots = np.arange(geom.subarray_cols // q) * q
+    slots = _output_slots(reliable_cols, q, geom)
     m_per_tile = slots.shape[0]
-    if m_per_tile == 0:
-        raise ValueError(
-            f"no usable output slots: need a run of q={q} consecutive "
-            f"reliable columns in the first {geom.subarray_cols} bitlines")
     col_chunks = math.ceil(m / m_per_tile)
     sched = schedule_tiles(n_chunks, col_chunks, geom)
 
     # Encode each reduction chunk ONCE (plan shared by all its column tiles).
-    plans = []
-    skipped = 0
-    r_bits = 0
-    for ci in range(n_chunks):
-        j0, j1 = ci * n_sub, min((ci + 1) * n_sub, n)
-        n_c = j1 - j0
-        if not naive and templates is not None and templates.n_sub == n_c:
-            plan = select_templates(a_u[j0:j1], templates, sparsity)
-        else:
-            plan = _plan_for(a_u[j0:j1], n_c, p, sparsity, naive)
-        plans.append(plan)
-        skipped += plan.skipped    # threaded out — no per-tile re-encode
-        r_bits = max(r_bits, accumulator_width(n_c, p))
+    plans, skipped, r_bits = _chunk_plans(a_u, n, n_sub, p, sparsity, naive,
+                                          templates)
 
     if wave:
-        partials, tile_rt, tile_pre = _gemv_waves(
+        partials, rt_arr, pre_arr = _gemv_waves(
             w_u, q, p, geom, plans, sched, slots, reliable_cols, n_sub, m)
+        tile_rt = [OpCounts(*r) for r in rt_arr.tolist()]
+        tile_pre = [OpCounts(*r) for r in pre_arr.tolist()]
     else:
         partials = np.zeros((n_chunks, m), dtype=np.int64)
         tile_rt = [None] * sched.tiles
@@ -456,30 +506,17 @@ def mvdram_gemv(aq: QuantizedTensor, wq: QuantizedTensor,
                 partials[ci, m0:m1] = out
                 tile_rt[ci * col_chunks + mi] = rt
                 tile_pre[ci * col_chunks + mi] = pre
+        rt_arr = _counts_matrix(tile_rt)
+        pre_arr = _counts_matrix(tile_pre)
 
     # Totals + per-wave maxima in two numpy reductions (waves are contiguous
     # tile ranges under the round-robin placement).
-    rt_arr = np.asarray([[getattr(c, f) for f in _COUNT_FIELDS]
-                         for c in tile_rt], dtype=np.int64)
-    pre_arr = np.asarray([[getattr(c, f) for f in _COUNT_FIELDS]
-                          for c in tile_pre], dtype=np.int64)
     runtime = OpCounts(*map(int, rt_arr.sum(axis=0)))
     preload = OpCounts(*map(int, pre_arr.sum(axis=0)))
-    pt = geom.parallel_tiles
-    wave_max = [OpCounts(*map(int, rt_arr[w * pt:(w + 1) * pt].max(axis=0)))
-                for w in range(sched.waves)]
+    wave_max = _wave_maxima(rt_arr, sched.waves, geom.parallel_tiles)
 
-    # Host aggregation with zero-point correction (paper §II-C2 / quant.py).
-    chunk_per_group = gs // n_sub if g > 1 else n_chunks
-    acc_g = partials.reshape(g, chunk_per_group, m).sum(axis=1)      # (g, m)
-    a_g = a_u.astype(np.int64).reshape(g, gs)
-    w_g = w_u.astype(np.int64).reshape(g, gs, m)
-    sum_a = a_g.sum(axis=1)                                          # (g,)
-    sum_w = w_g.sum(axis=1)                                          # (g, m)
-    corr = (acc_g - aq.zero * sum_w - wq.zero * sum_a[:, None]
-            + gs * aq.zero * wq.zero)
-    scale = np.asarray(wq.scale, dtype=np.float64)                   # (g, m)
-    out = (corr * scale).sum(axis=0) * float(np.asarray(aq.scale).reshape(-1)[0])
+    out = _aggregate_host(partials, a_u, w_u, aq, wq, n_chunks, n_sub, gs, g)
+    out = out * float(np.asarray(aq.scale).reshape(-1)[0])
 
     report = TileReport(
         n_chunks=n_chunks, col_chunks=col_chunks,
@@ -491,23 +528,123 @@ def mvdram_gemv(aq: QuantizedTensor, wq: QuantizedTensor,
     return out.astype(np.float32), report
 
 
+# -- shared helpers (single + batched entries) --------------------------------
+
+def _partition_checks(n: int, wq: QuantizedTensor, geom: PudGeometry):
+    n_sub = min(geom.n_sub_max, n)
+    n_chunks = math.ceil(n / n_sub)
+    g = wq.scale.shape[0]
+    if n % g:
+        raise ValueError(
+            f"weight scale groups must tile the reduction dim: N={n} is not "
+            f"divisible by G={g} groups (group_size must divide N)")
+    gs = n // g
+    if g > 1 and gs % n_sub:
+        raise ValueError(f"group size {gs} must be a multiple of n_sub {n_sub}")
+    return n_sub, n_chunks, gs, g
+
+
+def _output_slots(reliable_cols, q: int, geom: PudGeometry) -> np.ndarray:
+    if reliable_cols is not None:
+        slots = usable_output_slots(reliable_cols[:geom.subarray_cols], q)
+    else:
+        slots = np.arange(geom.subarray_cols // q) * q
+    if slots.shape[0] == 0:
+        raise ValueError(
+            f"no usable output slots: need a run of q={q} consecutive "
+            f"reliable columns in the first {geom.subarray_cols} bitlines")
+    return slots
+
+
+def _chunk_plans(a_u: np.ndarray, n: int, n_sub: int, p: int, sparsity: bool,
+                 naive: bool, templates: Optional[CommandTemplates]):
+    """Encode one activation vector per reduction chunk; returns
+    (plans, skipped bit count, max accumulator width)."""
+    plans, skipped, r_bits = [], 0, 0
+    for ci in range(math.ceil(n / n_sub)):
+        j0, j1 = ci * n_sub, min((ci + 1) * n_sub, n)
+        n_c = j1 - j0
+        if not naive and templates is not None and templates.n_sub == n_c:
+            plan = select_templates(a_u[j0:j1], templates, sparsity)
+        else:
+            plan = _plan_for(a_u[j0:j1], n_c, p, sparsity, naive)
+        plans.append(plan)
+        skipped += plan.skipped    # threaded out — no per-tile re-encode
+        r_bits = max(r_bits, accumulator_width(n_c, p))
+    return plans, skipped, r_bits
+
+
+def _counts_matrix(counts) -> np.ndarray:
+    """(tiles,) OpCounts sequence → (tiles, fields) int64 matrix."""
+    return np.asarray([[getattr(c, f) for f in _COUNT_FIELDS]
+                       for c in counts], dtype=np.int64)
+
+
+def _wave_maxima(rt_arr: np.ndarray, waves: int, parallel_tiles: int):
+    return [OpCounts(*map(int, rt_arr[w * parallel_tiles:
+                                      (w + 1) * parallel_tiles].max(axis=0)))
+            for w in range(waves)]
+
+
+def _aggregate_host(partials, a_u, w_u, aq, wq, n_chunks, n_sub, gs, g):
+    """Host aggregation with zero-point correction (paper §II-C2 / quant.py).
+
+    Broadcasts over any leading batch axes: partials (…, n_chunks, m),
+    a_u (…, n). Returns the per-group-scaled float output WITHOUT the
+    activation scale (caller applies its own per-request scale shape).
+    """
+    m = partials.shape[-1]
+    lead = partials.shape[:-2]
+    chunk_per_group = gs // n_sub if g > 1 else n_chunks
+    acc_g = partials.reshape(*lead, g, chunk_per_group, m).sum(axis=-2)
+    a_g = a_u.astype(np.int64).reshape(*lead, g, gs)
+    w_g = w_u.astype(np.int64).reshape(g, gs, m)
+    sum_a = a_g.sum(axis=-1)                                     # (…, g)
+    sum_w = w_g.sum(axis=1)                                      # (g, m)
+    corr = (acc_g - aq.zero * sum_w - wq.zero * sum_a[..., None]
+            + gs * aq.zero * wq.zero)
+    scale = np.asarray(wq.scale, dtype=np.float64)               # (g, m)
+    return (corr * scale).sum(axis=-2)
+
+
 def _gemv_waves(w_u: np.ndarray, q: int, p: int, geom: PudGeometry,
                 plans: list, sched: WaveSchedule, slots: np.ndarray,
                 reliable_cols: Optional[np.ndarray], n_sub: int, m: int):
-    """Execute the scheduled tiles wave by wave through `BankArray`.
+    """Single-request wave execution — the batched executor at B=1."""
+    partials, rt_arr, pre_arr = _gemv_waves_batched(
+        w_u, q, p, geom, [plans], sched, slots, reliable_cols, n_sub, m)
+    return partials[0], rt_arr[0], pre_arr[0]
+
+
+def _gemv_waves_batched(w_u: np.ndarray, q: int, p: int, geom: PudGeometry,
+                        plans_b: list, sched: WaveSchedule, slots: np.ndarray,
+                        reliable_cols: Optional[np.ndarray], n_sub: int,
+                        m: int):
+    """Execute B requests' scheduled tiles wave by wave through one shared
+    `BankArray(batch=B)`.
 
     Tiles of a wave sharing a reduction-chunk length n_c (hence the same row
     layout and accumulator width r) form one group that advances in single
     numpy steps; the ragged last chunk contributes at most one extra group
-    per wave. Per-tile OpCounts reproduce the sequential oracle exactly.
+    per wave. Each group's weight rows are gathered and staged ONCE — the
+    batch axis rides on the same resident rows (cross-request wave sharing) —
+    while the per-offset ripple-carries broadcast over (batch, tiles, rows,
+    cols). Per-(request, tile) OpCounts reproduce the sequential per-request
+    oracle exactly.
+
+    plans_b: (B,) lists of per-reduction-chunk plans (one per request).
+    Returns partials (B, n_chunks, m) plus (B, tiles, len(_COUNT_FIELDS))
+    runtime and preload count matrices (array-native; callers materialize
+    OpCounts objects for reports).
     """
+    B = len(plans_b)
     n = w_u.shape[0]
     cols = geom.subarray_cols
     m_per_tile = slots.shape[0]
     rel = (reliable_cols[:cols] if reliable_cols is not None else None)
-    partials = np.zeros((sched.n_chunks, m), dtype=np.int64)
-    tile_rt = [None] * sched.tiles
-    tile_pre = [None] * sched.tiles
+    partials = np.zeros((B, sched.n_chunks * m), dtype=np.int64)
+    rt_arrs = np.zeros((B, sched.tiles, len(_COUNT_FIELDS)), dtype=np.int64)
+    pre_arrs = np.zeros((B, sched.tiles, len(_COUNT_FIELDS)), dtype=np.int64)
     q_arange = np.arange(q)
     q_shift = np.arange(q, dtype=np.int64)
     slot_cols = (slots[:, None] + q_arange[None, :]).ravel()  # (m_per_tile·q,)
@@ -515,16 +652,28 @@ def _gemv_waves(w_u: np.ndarray, q: int, p: int, geom: PudGeometry,
     def chunk_len(ci: int) -> int:
         return min((ci + 1) * n_sub, n) - ci * n_sub
 
-    # Per-chunk activation bit matrices, shared by every tile of the chunk.
-    chunk_bits = [None] * sched.n_chunks
+    # Per-chunk selection state, shared by every tile of the chunk; the
+    # batch axis carries the B requests. `chunk_codes` holds the raw
+    # activation codes Σ_k 2^k·bit_k as float32 — by §V-D linearity ONE
+    # BLAS matmul against the resident rows advances all p bit offsets at
+    # once (exact: entries are 0/1·code sums ≤ (2^p−1)·n_sub ≪ 2^24).
+    # `chunk_popc` keeps the per-offset popcounts for command billing.
+    chunk_codes = [None] * sched.n_chunks
+    chunk_popc = [None] * sched.n_chunks
     chunk_zero_adds = [None] * sched.n_chunks
-    for ci, plan in enumerate(plans):
-        bits = np.zeros((chunk_len(ci), p), dtype=bool)
-        for k in range(p):
-            bits[plan.rows_per_offset[k], k] = True
-        chunk_bits[ci] = bits
-        chunk_zero_adds[ci] = (None if plan.sparsity
-                               else np.asarray(plan.zero_slots, np.int64))
+    for ci in range(sched.n_chunks):
+        n_c = chunk_len(ci)
+        codes = np.zeros((B, n_c), dtype=np.float32)
+        popc = np.zeros((B, p), dtype=np.int64)
+        for b, plans in enumerate(plans_b):
+            for k, rows_k in enumerate(plans[ci].rows_per_offset):
+                codes[b, rows_k] += float(1 << k)
+                popc[b, k] = rows_k.shape[0]
+        chunk_codes[ci] = codes
+        chunk_popc[ci] = popc
+        if not plans_b[0][ci].sparsity:
+            chunk_zero_adds[ci] = np.asarray(
+                [plans[ci].zero_slots for plans in plans_b], np.int64)
 
     for w in range(sched.waves):
         members = sched.wave_members(w)
@@ -540,10 +689,10 @@ def _gemv_waves(w_u: np.ndarray, q: int, p: int, geom: PudGeometry,
             # Only the layout's row prefix is ever touched — allocating the
             # full 512 physical rows per bank would just zero dead pages.
             bank = BankArray(T, rows=lay.rows_used, cols=cols,
-                             reliable_cols=rel)
-            # ---- load: weight bit-planes of the whole group at once -------
-            # Gather each tile's (n_c, m_per_tile) weight block; out-of-range
-            # output columns (ragged last column chunk) are masked to zero —
+                             reliable_cols=rel, batch=B)
+            # ---- load: weight bit-planes of the whole group, ONCE for all
+            # B requests (the shared-wave amortization). Out-of-range output
+            # columns (ragged last column chunk) are masked to zero —
             # exactly the empty bitlines the sequential loader leaves.
             row_idx = chunks[:, None] * n_sub + np.arange(n_c)[None, :]
             col_idx = m0s[:, None] + np.arange(m_per_tile)[None, :]
@@ -558,36 +707,137 @@ def _gemv_waves(w_u: np.ndarray, q: int, p: int, geom: PudGeometry,
             bank.host_write_row(lay.one_row, np.ones(cols, np.uint8))
             bank.host_write_rows(lay.matrix_rows, rows_block)
             bank.host_write_rows(lay.inv_matrix_rows, 1 - rows_block)
-            pre_counts = bank.tile_counts()
+            tiles_idx = np.asarray([a.tile for a in group])
+            pre_arrs[:, tiles_idx] = bank.counts_matrix()
             bank.reset_counts()
-            # ---- compute: one batched ripple-carry per bit offset ---------
+            # ---- compute: all B requests' command streams against the
+            # resident rows. §V-D linearity collapses the p per-offset
+            # ripple-carries into ONE code matmul (Σ_k 2^k bits_k = codes;
+            # addition mod 2^r commutes with the collapse), so the whole
+            # wave × batch advances in a single BLAS step — bit-identical to
+            # issuing `add_rows_batched_wave` per offset (the retained
+            # granular primitive, tested equivalent). Commands are still
+            # billed per offset template below.
             clear_accumulator(bank, lay)
-            group_bits = np.stack([chunk_bits[c] for c in chunks])  # (T,n_c,p)
-            matrix_block = rows_block.astype(np.int32)
-            acc_val = np.zeros((T, cols), dtype=np.int64)
+            matrix_block = rows_block.astype(np.float32)
+            group_codes = np.stack([chunk_codes[c] for c in chunks],
+                                   axis=1)                     # (B, T, n_c)
+            acc_val = (np.matmul(group_codes.transpose(1, 0, 2), matrix_block)
+                       .astype(np.int64).transpose(1, 0, 2)
+                       & ((1 << lay.r) - 1))                   # (B, T, cols)
+            # one deferred row materialization for all p offsets — the
+            # intermediate states are never observed, and the rows end up
+            # holding the bank's final time-shared occupant
+            write_accumulator_wave(bank, lay, acc_val)
+            group_popc = np.stack([chunk_popc[c] for c in chunks],
+                                  axis=1)                      # (B, T, p)
             for k in range(p):
-                zeros_k = None
+                n_adds = group_popc[..., k]
                 if chunk_zero_adds[chunks[0]] is not None:
-                    zeros_k = np.asarray(
-                        [chunk_zero_adds[c][k] for c in chunks], np.int64)
-                acc_val = add_rows_batched_wave(
-                    bank, lay, group_bits[:, :, k], offset=k,
-                    n_zero_adds=zeros_k, matrix_block=matrix_block,
-                    acc_val=acc_val)
-            # ---- readout: row-wise aggregation, whole group at once -------
-            acc = bank.host_read_rows(lay.acc_rows).astype(np.int64)
-            weights_b = (1 << np.arange(lay.r, dtype=np.int64))[None, :, None]
-            col_vals = (acc * weights_b).sum(axis=1)           # (T, cols)
-            outs = (col_vals[:, slot_cols].reshape(T, m_per_tile, q)
-                    << q_shift).sum(axis=2)                    # (T, m_per)
+                    n_adds = n_adds + np.stack(
+                        [chunk_zero_adds[c][:, k] for c in chunks], axis=1)
+                bank.charge_adds(adder_cost(lay.r - k), n_adds)
+            # ---- readout: each request reads its accumulator rows back at
+            # its turn. The charge goes through the device API (shared
+            # traffic — every request's view bills its own r-row read); the
+            # VALUES come from the arithmetic track, which on the reliable
+            # slot columns is bit-identical to the rows each occupant held.
+            bank.charge_host_read(lay.acc_rows)
+            outs = (acc_val[:, :, slot_cols].reshape(B, T, m_per_tile, q)
+                    << q_shift).sum(axis=-1)                   # (B, T, m_per)
             bank.charge_host_int_ops(m_subs * q)
-            rt_counts = bank.tile_counts()
-            for ti, asg in enumerate(group):
-                m_sub = m_subs[ti]
-                partials[asg.chunk, m0s[ti]:m0s[ti] + m_sub] = outs[ti, :m_sub]
-                tile_pre[asg.tile] = pre_counts[ti]
-                tile_rt[asg.tile] = rt_counts[ti]
-    return partials, tile_rt, tile_pre
+            rt_arrs[:, tiles_idx] = bank.counts_matrix()
+            # scatter the group's outputs into every request's partials in
+            # one flat fancy-index write (ragged tails masked by `valid`)
+            flat_idx = (chunks[:, None] * m + col_idx)[valid]  # (n_valid,)
+            partials[:, flat_idx] = outs.reshape(B, -1)[:, valid.ravel()]
+    return (partials.reshape(B, sched.n_chunks, m), rt_arrs, pre_arrs)
+
+
+def mvdram_gemv_batched(aq: QuantizedTensor, wq: QuantizedTensor,
+                        sparsity: bool = True,
+                        geom: PudGeometry = PudGeometry(),
+                        reliable_cols: Optional[np.ndarray] = None,
+                        templates: Optional[CommandTemplates] = None):
+    """B GeMVs against one resident matrix, executed in SHARED waves.
+
+    `aq.values` is (B, N) activation codes with per-request scales (B, 1) —
+    the lane batch a serving engine accumulates. The B requests' tile grids
+    are co-scheduled on one set of (channel, bank, wave) slots
+    (`schedule.schedule_batch`): each wave group's weight rows are gathered
+    and staged once, and all B popcount-selected command streams ripple
+    against them on the batch axis of `device.BankArray`.
+
+    Returns ((B, M) float32, `BatchReport`). Contract (tested): outputs and
+    per-tile OpCounts of `report.requests[b]` are bit-identical to
+    `mvdram_gemv(aq_b, wq, ...)` run alone; `report.shared_preload` /
+    `report.wave_max` carry the amortized shared-wave accounting that
+    `timing.price_gemv_batched` prices.
+    """
+    a_u = np.asarray(aq.values, dtype=np.uint32)
+    if a_u.ndim != 2:
+        raise ValueError(
+            f"batched GeMV takes (B, N) activation codes, got shape "
+            f"{a_u.shape}")
+    w_u = np.asarray(wq.values, dtype=np.uint32)
+    B = a_u.shape[0]
+    n, m = w_u.shape
+    q, p = wq.spec.bits, aq.spec.bits
+    n_sub, n_chunks, gs, g = _partition_checks(n, wq, geom)
+
+    slots = _output_slots(reliable_cols, q, geom)
+    m_per_tile = slots.shape[0]
+    col_chunks = math.ceil(m / m_per_tile)
+    bsched = schedule_batch(n_chunks, col_chunks, B, geom)
+
+    # Per-request chunk encoding (popcount template selection, §V-D); the
+    # command TEMPLATES are shared — only the selections differ per request.
+    plans_b, skipped_b, r_bits = [], [], 0
+    for b in range(B):
+        plans, skipped, r_b = _chunk_plans(a_u[b], n, n_sub, p, sparsity,
+                                           False, templates)
+        plans_b.append(plans)
+        skipped_b.append(skipped)
+        r_bits = max(r_bits, r_b)
+
+    partials, rt_arrs, pre_arrs = _gemv_waves_batched(
+        w_u, q, p, geom, plans_b, bsched.base, slots, reliable_cols,
+        n_sub, m)
+
+    # Per-request reports (oracle-identical) + shared batch accounting. The
+    # staging counts are batch-invariant (weights loaded once, every request
+    # sees the same resident rows), so the preload tuple is built once and
+    # shared by all request views.
+    tiles = n_chunks * col_chunks
+    agg_bits = tiles * r_bits * geom.subarray_cols
+    pt = geom.parallel_tiles
+    pre_objs = tuple(OpCounts(*r) for r in pre_arrs[0].tolist())
+    preload = OpCounts(*map(int, pre_arrs[0].sum(axis=0)))
+    requests = []
+    for b in range(B):
+        rt_arr = rt_arrs[b]
+        requests.append(TileReport(
+            n_chunks=n_chunks, col_chunks=col_chunks, tiles=tiles,
+            runtime=OpCounts(*map(int, rt_arr.sum(axis=0))),
+            preload=preload,
+            skipped_bits=skipped_b[b], r_bits=r_bits,
+            aggregate_bits=agg_bits, waves=bsched.waves,
+            wave_max=tuple(_wave_maxima(rt_arr, bsched.waves, pt)),
+            tile_runtime=tuple(OpCounts(*r) for r in rt_arr.tolist()),
+            tile_preload=pre_objs))
+    # Physical shared accounting: weight staging once; the B compute streams
+    # time-share each bank, so a wave is bound by its slowest SUMMED tile.
+    shared_preload = preload   # the per-request view IS the one staging pass
+    batch_runtime = OpCounts(*map(int, rt_arrs.sum(axis=(0, 1))))
+    batch_wave_max = _wave_maxima(rt_arrs.sum(axis=0), bsched.waves, pt)
+    report = BatchReport(batch=B, schedule=bsched, requests=tuple(requests),
+                         shared_preload=shared_preload,
+                         runtime=batch_runtime,
+                         wave_max=tuple(batch_wave_max))
+
+    out = _aggregate_host(partials, a_u, w_u, aq, wq, n_chunks, n_sub, gs, g)
+    out = out * np.asarray(aq.scale, dtype=np.float64).reshape(B, 1)
+    return out.astype(np.float32), report
 
 
 def _gemv_tile_on_slots(w_tile, a_tile, q, p, sparsity, geom,
@@ -662,6 +912,10 @@ class GemvCost:
     aggregate_bits: int        # DRAM→host output bits
     encode_host_ops: int       # O(N·p) command-template patching
     vector_prearrange_bits: int  # host→DRAM activation writes (0 for MVDRAM)
+    # Per-wave weight staging (matrix + complement rows + constants): paid
+    # once per GeMV launch — and once per BATCH under cross-request wave
+    # sharing (`timing.price_gemv_batched` amortizes exactly this).
+    weight_load_bits: int = 0
 
 
 def mvdram_gemv_cost(m: int, n: int, q: int, p: int,
@@ -685,7 +939,13 @@ def mvdram_gemv_cost(m: int, n: int, q: int, p: int,
                     waves=math.ceil(tiles / geom.parallel_tiles),
                     ops_per_tile=per_tile, runtime=runtime, r_bits=r,
                     aggregate_bits=agg_bits, encode_host_ops=n * p,
-                    vector_prearrange_bits=0)
+                    vector_prearrange_bits=0,
+                    # per tile: 2 constant rows + one (matrix, complement)
+                    # row pair per reduction row of its chunk; summing the
+                    # chunk lengths (Σ n_c = n) keeps this exact on ragged
+                    # shapes, reconciling with the simulator's staged bits
+                    weight_load_bits=col_chunks
+                    * (2 * n_chunks + 2 * n) * cols)
 
 
 def conventional_pud_cost(m: int, n: int, q: int, p: int,
@@ -722,4 +982,5 @@ def conventional_pud_cost(m: int, n: int, q: int, p: int,
                     waves=math.ceil(tiles / geom.parallel_tiles),
                     ops_per_tile=per_col, runtime=runtime, r_bits=r,
                     aggregate_bits=agg_bits, encode_host_ops=0,
-                    vector_prearrange_bits=m * n * p)
+                    vector_prearrange_bits=m * n * p,
+                    weight_load_bits=m * n * q)

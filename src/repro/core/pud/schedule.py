@@ -94,3 +94,80 @@ def schedule_tiles(n_chunks: int, col_chunks: int,
             wave=slot // geom.banks_per_channel))
     return WaveSchedule(n_chunks=n_chunks, col_chunks=col_chunks, geom=geom,
                         assignments=tuple(asg))
+
+
+# ---------------------------------------------------------------------------
+# Cross-request wave sharing (reuse-aware co-scheduling, RACAM-style)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class BatchSchedule:
+    """Co-schedule of B GeMV requests against ONE registered matrix.
+
+    Reuse-aware placement: every request partitions into the SAME
+    (reduction_chunk, column_chunk) tile grid, so the B requests' instances
+    of weight tile t are co-located on tile t's single (channel, bank, wave)
+    slot of the base `WaveSchedule`. Within that slot the weight rows are
+    loaded ONCE per wave and the B per-request command streams execute
+    back-to-back against the resident rows — the batch axis shares the
+    wave's RowCopy/write weight traffic instead of paying it B times, which
+    is the reuse-aware mapping RACAM applies to ML inference in DRAM.
+
+    `weight_loads` / `unshared_weight_loads` quantify the reuse: one tile
+    load per slot versus one per (request, tile) if each request launched
+    its own independent pass.
+    """
+
+    batch: int
+    base: WaveSchedule
+
+    @property
+    def tiles(self) -> int:
+        return self.base.tiles
+
+    @property
+    def waves(self) -> int:
+        return self.base.waves
+
+    @property
+    def n_chunks(self) -> int:
+        return self.base.n_chunks
+
+    @property
+    def col_chunks(self) -> int:
+        return self.base.col_chunks
+
+    @property
+    def geom(self) -> PudGeometry:
+        return self.base.geom
+
+    def wave_members(self, wave: int) -> tuple:
+        """Tiles of `wave`; each member slot serves all `batch` requests."""
+        return self.base.wave_members(wave)
+
+    @property
+    def weight_loads(self) -> int:
+        """Per-wave weight-tile loads under sharing: one per tile slot."""
+        return self.tiles
+
+    @property
+    def unshared_weight_loads(self) -> int:
+        """Loads B independent sequential passes would pay."""
+        return self.batch * self.tiles
+
+    @property
+    def reuse_factor(self) -> float:
+        """Weight-traffic amortization of the co-schedule (== batch)."""
+        return self.unshared_weight_loads / self.weight_loads
+
+
+def schedule_batch(n_chunks: int, col_chunks: int, batch: int,
+                   geom: PudGeometry) -> BatchSchedule:
+    """Place B requests' tile grids on one shared set of (channel, bank,
+    wave) slots. The base placement is the round-robin §VII schedule — the
+    reuse comes from mapping every request's tile t to the SAME slot, so the
+    slot's weight rows serve the whole batch."""
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    return BatchSchedule(batch=batch,
+                         base=schedule_tiles(n_chunks, col_chunks, geom))

@@ -164,6 +164,9 @@ def simulated_wave_time(report, model: DDR4Model = DDR4_2400) -> float:
     The simulated counterpart of `price_gemv`'s analytic t_bank: each wave is
     bound by its slowest bank (`TileReport.wave_max`), waves serialize. At
     matched geometry and dense activation bits the two are equal (tested).
+    Also accepts a `BatchReport` — its `wave_max` entries already sum the B
+    per-request command streams that time-share each bank, so the same
+    serialization math prices the shared-wave batch.
     """
     return sum(c.pud_ops for c in report.wave_max) * model.t_op
 
@@ -192,6 +195,101 @@ def price_gemv(cost: GemvCost, geom: PudGeometry = PudGeometry(),
     return PudCost(t_compute=t_compute, t_aggregate=t_aggregate,
                    t_encode_extra=t_encode_extra, t_prearrange=t_prearrange,
                    e_pud=e_pud, e_io=e_io, e_host=e_host)
+
+
+# ---------------------------------------------------------------------------
+# Cross-request wave sharing: batched pricing
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class BatchedPudCost:
+    """Priced execution of one SHARED-WAVE batched launch of B GeMVs.
+
+    Compute streams are data-dependent per request, so within each wave slot
+    the B command streams serialize on the bank (t_compute ≈ B× a single
+    pass); readout and encoding scale with B likewise. What the co-schedule
+    amortizes is the per-wave WEIGHT staging: `t_weight_load` /
+    `weight_load_bits` are paid ONCE for the batch, where B independent
+    launches (`sequential`) each re-stage their waves' weight rows. The
+    simulator's `BatchReport.shared_preload` records the same amortized
+    bits (reconciled by test).
+    """
+
+    batch: int
+    t_compute: float       # B per-request streams, waves serialized
+    t_aggregate: float     # B accumulator readouts
+    t_encode_extra: float  # non-overlapped remainder of B encodes
+    t_weight_load: float   # per-wave weight staging — paid once, shared
+    weight_load_bits: int  # the amortized DRAM-write traffic (once)
+    e_pud: float
+    e_io: float
+    e_host: float
+    sequential: PudCost    # what ONE independent launch costs (incl. reload)
+
+    @property
+    def t_total(self) -> float:
+        return (self.t_compute + self.t_aggregate + self.t_encode_extra
+                + self.t_weight_load)
+
+    @property
+    def e_total(self) -> float:
+        return self.e_pud + self.e_io + self.e_host
+
+    @property
+    def t_sequential_total(self) -> float:
+        """B independent launches, each re-staging its wave weights."""
+        return self.batch * (self.sequential.t_total + self.t_weight_load)
+
+    @property
+    def amortization(self) -> float:
+        """Shared-wave speedup over B independent passes."""
+        return self.t_sequential_total / self.t_total
+
+    def asdict(self):
+        d = dataclasses.asdict(self)
+        d["sequential"] = self.sequential.asdict()
+        d["t_total"] = self.t_total
+        d["t_sequential_total"] = self.t_sequential_total
+        d["amortization"] = self.amortization
+        return d
+
+
+def price_gemv_batched(cost: GemvCost, batch: int,
+                       geom: PudGeometry = PudGeometry(),
+                       model: DDR4Model = DDR4_2400) -> BatchedPudCost:
+    """Price B GeMVs co-scheduled in shared waves (`schedule.schedule_batch`).
+
+    The per-request analytic `cost` is a single-pass `mvdram_gemv_cost`; the
+    batched launch bills B× its data-dependent command stream per wave slot
+    (the streams time-share the bank), B× aggregation/encoding, but exactly
+    ONE staging of each wave's weight rows (`cost.weight_load_bits`) — the
+    amortized AAP/write counts the simulator's `BatchReport` reports, not B
+    independent passes.
+    """
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    ops_tile = cost.ops_per_tile.pud_ops
+    tiles_per_channel = math.ceil(cost.tiles / geom.channels)
+    t_bank = bank_waves(cost.tiles, geom) * batch * ops_tile * model.t_op
+    t_bus = tiles_per_channel * batch * ops_tile * model.t_cmd
+    t_compute = max(t_bank, t_bus)
+    t_aggregate = batch * (cost.aggregate_bits / 8) / model.agg_bw
+    t_encode = batch * cost.encode_host_ops / model.host_encode_rate
+    t_encode_extra = max(0.0, t_encode - t_compute)
+    t_weight_load = (cost.weight_load_bits / 8) / model.agg_bw
+
+    rt = cost.runtime
+    e_pud = batch * rt.pud_ops * model.e_op
+    e_io = (batch * (rt.host_bits_read + rt.host_bits_written)
+            + cost.weight_load_bits) * model.e_bit_io
+    e_host = (batch * rt.host_int_ops * model.e_host_op
+              + model.idle_power * t_compute)
+    return BatchedPudCost(
+        batch=batch, t_compute=t_compute, t_aggregate=t_aggregate,
+        t_encode_extra=t_encode_extra, t_weight_load=t_weight_load,
+        weight_load_bits=cost.weight_load_bits,
+        e_pud=e_pud, e_io=e_io, e_host=e_host,
+        sequential=price_gemv(cost, geom, model))
 
 
 # ---------------------------------------------------------------------------

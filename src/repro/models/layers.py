@@ -16,23 +16,32 @@ from ..parallel.sharding import constrain
 
 
 def dense(x: jax.Array, w, b: Optional[jax.Array] = None,
-          act_bits: Optional[int] = None, impl: str = "jnp") -> jax.Array:
+          act_bits: Optional[int] = None, impl="jnp") -> jax.Array:
     """x (..., N) @ w (N, M). `w` may be:
 
       jnp.ndarray        — dense matmul (training / bf16 serving)
       BitplaneWeights    — MVDRAM bit-plane engine (float or bit-serial acts)
       QuantizedTensor    — fused-dequant baseline kernel
+
+    `impl` is a backend string, or a callable `(x, w, act_bits) -> out`
+    (e.g. `core.engine.EngineLinear`) that routes every BitplaneWeights
+    linear — the serve batch's lane-batched GeMVs — through the MVDRAM
+    engine; non-bitplane leaves fall back to the callable's `.mode` string.
     """
     if isinstance(w, BitplaneWeights):
-        from ..kernels.bitplane_gemv import ops as bp
-        if act_bits:
-            out = bp.bitplane_gemv_bitserial(x, w, QuantSpec(bits=act_bits),
-                                             impl=impl)
+        if callable(impl):
+            out = impl(x, w, act_bits).astype(x.dtype)
         else:
-            out = bp.bitplane_gemv(x, w, impl=impl)
-        out = out.astype(x.dtype)
+            from ..kernels.bitplane_gemv import ops as bp
+            if act_bits:
+                out = bp.bitplane_gemv_bitserial(
+                    x, w, QuantSpec(bits=act_bits), impl=impl)
+            else:
+                out = bp.bitplane_gemv(x, w, impl=impl)
+            out = out.astype(x.dtype)
     elif isinstance(w, QuantizedTensor):
         from ..kernels.quant_matmul import ops as qm
+        impl = getattr(impl, "mode", impl)
         out = qm.quant_matmul(x, w, impl=impl).astype(x.dtype)
     else:
         out = jnp.einsum("...n,nm->...m", x, w.astype(x.dtype))

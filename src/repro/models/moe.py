@@ -31,7 +31,11 @@ def _expert_mm(xe, w, impl="jnp"):
 
     `w` is a dense (E, din, dout) array — or an E-stacked BitplaneWeights,
     in which case each expert's tile goes through the MVDRAM bit-plane
-    engine (the per-expert GeMV batch the paper's low-bit path serves)."""
+    engine (the per-expert GeMV batch the paper's low-bit path serves).
+    A callable `impl` (the serve engine's `EngineLinear` router) degrades
+    to its backend string here — the vmap'd expert stack is not a single
+    2-D registered GeMV."""
+    impl = getattr(impl, "mode", impl)
     from ..core.bitplane import BitplaneWeights
     if isinstance(w, BitplaneWeights):
         from ..kernels.bitplane_gemv import ops as bp

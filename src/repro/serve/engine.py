@@ -5,13 +5,21 @@ request batch (continuous batching at the granularity real schedulers use:
 a request occupies one batch lane until finished). `make_serve_step` /
 `cache_pspecs` are the pieces the multi-pod dry-run lowers.
 
-Decode runs under ONE jitted `jax.lax.scan` over the generation steps with
-the KV cache donated (`donate_argnums`): per-token logits never round-trip
-through host argmax, and the cache is updated in place instead of being
-re-allocated per step. The per-token Python loop is retained behind
-`scan=False` as the token-for-token oracle (tested identical at
-temperature 0 and for the seeded sampling path — the scan folds the same
-per-step PRNG keys).
+Decode runs under ONE MASKED jitted `jax.lax.scan` per power-of-two
+length bucket (capped at the cache horizon) with the KV cache donated
+(`donate_argnums`): temperature is a traced scalar and per-lane length
+masks freeze finished lanes, so a bounded set of ≤ log2(max_seq)
+executables (per prompt length — the prefill already compiles per S0)
+serves EVERY (steps, temperature) request mix with no recompilation. The
+per-token Python loop is retained behind `scan=False` as the
+token-for-token oracle (tested identical at temperature 0 and for the
+seeded sampling path — the scan folds the same per-step PRNG keys).
+
+Quantized serving routes every lane-batched bit-plane linear through an
+`MVDRAMEngine` (`core.engine.EngineLinear` installed as the model's
+`impl`): the (lanes, N) decode activations execute as ONE batched GeMV
+launch per weight — the software analogue of the simulator's cross-request
+wave sharing, where the resident weight rows serve the whole lane batch.
 """
 from __future__ import annotations
 
@@ -22,6 +30,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..core.engine import EngineLinear, MVDRAMEngine
 from ..models.config import ModelConfig
 from ..models.model import Model
 from ..parallel.sharding import axis_rules, logical_to_pspec
@@ -78,67 +87,101 @@ class ServeEngine:
         self.mesh, self.rules = mesh, rules
         self.max_seq = max_seq
         self.slots = batch_slots
+        self.mvdram: Optional[MVDRAMEngine] = None
+        model_impl = impl
         if quantized:
             params = quantize_params(params, cfg.weight_bits)
+            # every lane-batched quantized linear routes through the engine
+            self.mvdram = MVDRAMEngine()
+            model_impl = EngineLinear(self.mvdram, mode=impl)
         self.params = params
         self.model = Model(cfg, act_bits=act_bits if quantized else None,
-                           impl=impl)
+                           impl=model_impl)
         self._prefill = jax.jit(partial(self.model.prefill,
                                         max_seq=max_seq))
         self._step = jax.jit(make_serve_step(self.model))
         self._decode_fns: dict = {}
 
-    def _decode_scan_fn(self, steps: int, temperature: float):
-        """Jitted scan over `steps` decode iterations; cache donated so XLA
+    def _decode_scan_fn(self, trip: int):
+        """ONE masked jitted scan over `trip` decode slots (a power-of-two
+        length bucket, capped at the cache horizon); cache donated so XLA
         reuses the KV buffers in place across the whole generation.
 
-        One executable is compiled and retained per distinct
-        (steps, temperature) pair — the right trade for this engine's
-        fixed-shape benchmark/serving loops; a deployment with free-form
-        per-request lengths would want a single masked scan to max_seq
-        instead (see ROADMAP)."""
-        key_ = (steps, float(temperature))
-        if key_ not in self._decode_fns:
+        Temperature rides as a TRACED scalar and `steps_vec` carries
+        per-lane length masks (a finished lane re-emits its frozen token),
+        so a bounded bucket set per prompt length serves every requested
+        (max_new, temperature) — the recompile-per-request-length problem
+        the per-(steps, temperature) cache had is gone. Token-for-token
+        identical to the Python loop oracle on every step before a lane's
+        budget (tested, greedy + seeded sampling)."""
+        if trip not in self._decode_fns:
             model = self.model
 
-            def run(params, cache, cur, pos0, key0):
+            def run(params, cache, cur, pos0, key0, steps_vec, temperature):
                 def body(carry, t):
                     cache, cur, key = carry
                     logits, cache = model.decode_step(params, cache, cur,
                                                       pos0 + t)
                     key = jax.random.fold_in(key, t)   # same chain as loop
-                    nxt = self._sample(logits, temperature, key)
+                    sampled = self._sample_traced(logits, temperature, key)
+                    nxt = jnp.where(t < steps_vec, sampled, cur)
                     return (cache, nxt, key), nxt
 
                 (_, _, _), out = jax.lax.scan(
                     body, (cache, cur, key0),
-                    jnp.arange(steps, dtype=jnp.int32))
-                return out                       # (steps, B)
+                    jnp.arange(trip, dtype=jnp.int32))
+                return out                       # (trip, B)
 
-            self._decode_fns[key_] = jax.jit(run, donate_argnums=(1,))
-        return self._decode_fns[key_]
+            self._decode_fns[trip] = jax.jit(run, donate_argnums=(1,))
+        return self._decode_fns[trip]
 
     def generate(self, prompts, max_new: int = 32, temperature: float = 0.0,
-                 seed: int = 0, scan: bool = True):
+                 seed: int = 0, scan: bool = True,
+                 max_new_per_lane=None):
         """prompts: int32 (B, S0) (B ≤ slots; right-aligned padding NOT
         supported — equal-length prompts, as in the paper's benchmark).
         Returns (B, S0 + max_new) tokens.
 
-        `scan=True` (default) runs all decode steps inside one jitted
-        lax.scan with the cache donated; `scan=False` keeps the per-token
-        Python loop (oracle — token-for-token identical, same PRNG folds).
-        """
+        `scan=True` (default) runs the single masked lax.scan with the
+        cache donated; `scan=False` keeps the per-token Python loop
+        (oracle — token-for-token identical, same PRNG folds).
+        `max_new_per_lane` (optional (B,) ints ≤ max_new) caps lanes
+        individually: a lane past its budget re-emits its last token (a
+        0-budget lane its final prompt token) — the per-lane masks of the
+        single-executable decode, applied identically on the loop
+        oracle."""
         b, s0 = prompts.shape
         assert b <= self.slots
+        if s0 + max_new > self.max_seq:
+            raise ValueError(
+                f"prompt ({s0}) + max_new ({max_new}) exceeds the cache "
+                f"horizon max_seq={self.max_seq}")
+        steps_vec = jnp.full((b,), max_new - 1, jnp.int32)
+        budget = None
+        if max_new_per_lane is not None:
+            budget = jnp.asarray(max_new_per_lane, jnp.int32)
+            steps_vec = jnp.minimum(budget - 1, steps_vec)
         with axis_rules(self.mesh, self.rules):
             logits, cache = self._prefill(self.params, {"tokens": prompts})
             key = jax.random.PRNGKey(seed)
             cur = self._sample(logits, temperature, key)
+            if budget is not None:
+                # a 0-budget lane emits no generated tokens — its columns
+                # repeat the final prompt token instead
+                cur = jnp.where(budget > 0, cur, prompts[:, -1])
             if scan and max_new > 1:
-                rest = self._decode_scan_fn(max_new - 1, temperature)(
-                    self.params, cache, cur, jnp.int32(s0), key)
+                # bucket the trip count to the next power of two (capped at
+                # the cache horizon): a bounded set of ≤ log2(max_seq)
+                # executables per prompt length, without paying the full
+                # horizon scan for short generations
+                trip = min(self.max_seq - s0 - 1,
+                           1 << (max_new - 2).bit_length())
+                rest = self._decode_scan_fn(trip)(
+                    self.params, cache, cur, jnp.int32(s0), key,
+                    steps_vec, jnp.float32(temperature))
                 return jnp.concatenate(
-                    [prompts, cur[:, None], jnp.transpose(rest)], axis=1)
+                    [prompts, cur[:, None],
+                     jnp.transpose(rest[:max_new - 1])], axis=1)
             toks = [prompts]
             for t in range(max_new):
                 toks.append(cur[:, None])
@@ -147,7 +190,9 @@ class ServeEngine:
                 logits, cache = self._step(self.params, cache, cur,
                                            jnp.int32(s0 + t))
                 key = jax.random.fold_in(key, t)
-                cur = self._sample(logits, temperature, key)
+                # same per-lane freeze as the masked scan (oracle parity)
+                cur = jnp.where(t < steps_vec,
+                                self._sample(logits, temperature, key), cur)
         return jnp.concatenate(toks, axis=1)
 
     @staticmethod
@@ -157,12 +202,30 @@ class ServeEngine:
         return jax.random.categorical(key, logits / temperature
                                       ).astype(jnp.int32)
 
+    @staticmethod
+    def _sample_traced(logits, temperature, key):
+        """`_sample` with temperature as a TRACED scalar: both branches are
+        computed and selected, so one executable covers greedy and sampled
+        decode. Bit-identical to `_sample` for temperature == 0 (argmax)
+        and > 0 (same key, same logits/temperature ratio)."""
+        greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        # exact divide for EVERY positive temperature (the substitute value
+        # only feeds the dead greedy branch, avoiding div-by-zero)
+        safe_t = jnp.where(temperature > 0.0, temperature, 1.0)
+        hot = jax.random.categorical(key, logits / safe_t).astype(jnp.int32)
+        return jnp.where(temperature > 0.0, hot, greedy)
+
     def throughput_tokens_per_s(self, b: int = 1, n: int = 16) -> float:
         """Measured decode tokens/s on the current backend (CPU here —
-        meaningful for RELATIVE comparisons, e.g. quantized vs dense)."""
+        meaningful for RELATIVE comparisons, e.g. quantized vs dense).
+
+        The masked decode scans to the power-of-two bucket of `n`, so the
+        wall-clock includes any frozen tail past `n` — the honest cost of
+        the bucketed single-executable engine; useful tokens (b·n) stay
+        the numerator."""
         import time
         prompts = jnp.zeros((b, 8), jnp.int32)
-        _ = self.generate(prompts, max_new=n)   # warm the exact scan length
+        _ = self.generate(prompts, max_new=n)   # warm the bucket executable
         t0 = time.perf_counter()
         _ = self.generate(prompts, max_new=n)
         dt = time.perf_counter() - t0

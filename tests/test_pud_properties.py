@@ -2,7 +2,7 @@
 
 Randomized (q, p, n, m, group_size, zero-point mode, sparsity) draws via the
 `tests/conftest.py` hypothesis shim (or real hypothesis when installed),
-asserting the paper's two load-bearing equivalences:
+asserting the paper's load-bearing equivalences:
 
   1. `mvdram_gemv` == `quantized_gemv_reference` — the in-DRAM command
      streams compute exactly the integer GeMV algebra (bit-exact in the
@@ -10,6 +10,10 @@ asserting the paper's two load-bearing equivalences:
   2. wave-parallel execution == the retained sequential per-tile oracle —
      outputs AND per-tile OpCounts identical, including under reliability
      masks, ragged tails and grouped scales.
+  3. batched shared-wave execution == B sequential per-request runs —
+     every request's outputs AND per-tile OpCounts identical, with the
+     batch-level shared accounting (weight staging once) consistent,
+     for B from 1 up past the rank's parallel wave capacity.
 
 These replace the hand-picked parametrize grids that previously guarded the
 executor equivalences in `test_pud_sim.py`.
@@ -19,7 +23,7 @@ import numpy as np
 from hypothesis import given, settings, strategies as st
 
 from repro.core.pud.gemv import (PudGeometry, mvdram_gemv,
-                                 usable_output_slots)
+                                 mvdram_gemv_batched, usable_output_slots)
 from repro.core.quant import (QuantSpec, quantize_activations,
                               quantize_weights, quantized_gemv_reference)
 
@@ -105,6 +109,74 @@ def test_wave_matches_sequential_oracle(q, p, n_chunks, ragged,
     assert rep_w.waves == rep_s.waves
     assert [c.asdict() for c in rep_w.wave_max] \
         == [c.asdict() for c in rep_s.wave_max]
+
+
+@settings(max_examples=15, deadline=None)
+@given(q=st.integers(1, 4), p=st.integers(1, 4),
+       batch=st.integers(1, 6),           # GEOM.parallel_tiles == 4 < 6
+       n_chunks=st.integers(1, 4), ragged=st.integers(0, N_SUB - 1),
+       chunks_per_group=st.sampled_from([1, 2]),
+       m=st.integers(1, 12),
+       w_symmetric=st.booleans(), a_symmetric=st.booleans(),
+       sparsity=st.booleans(), masked=st.booleans(),
+       seed=st.integers(0, 2 ** 16))
+def test_batched_matches_per_request_oracle(q, p, batch, n_chunks, ragged,
+                                            chunks_per_group, m, w_symmetric,
+                                            a_symmetric, sparsity, masked,
+                                            seed):
+    """Cross-request wave sharing is bit-identical to B sequential
+    `mvdram_gemv` calls: per-request outputs, per-tile AND total OpCounts,
+    skipped-bit counts — under reliability masks, ragged tails, grouped
+    scales, and B both below and above the parallel wave capacity. The
+    shared batch accounting must reconcile with the per-request views."""
+    n, group_size = _resolve_shape(n_chunks, ragged, chunks_per_group)
+    r = np.random.default_rng(seed)
+    w = jnp.asarray(r.normal(size=(n, m)), jnp.float32)
+    A = jnp.asarray(r.normal(size=(batch, n)), jnp.float32)
+    wq = quantize_weights(w, QuantSpec(bits=q, symmetric=w_symmetric,
+                                       group_size=group_size))
+    aqb = quantize_activations(A, QuantSpec(bits=p, symmetric=a_symmetric))
+    rel = None
+    if masked:
+        rel = np.random.default_rng(seed + 1).random(GEOM.subarray_cols) > 0.2
+        if usable_output_slots(rel[:GEOM.subarray_cols], q).shape[0] == 0:
+            rel = None
+    out_b, rep = mvdram_gemv(aqb, wq, sparsity=sparsity, geom=GEOM,
+                             reliable_cols=rel)
+    assert out_b.shape == (batch, m)
+    assert rep.batch == batch and len(rep.requests) == batch
+    oracle_ops = 0
+    for b in range(batch):
+        aq1 = quantize_activations(A[b], QuantSpec(bits=p,
+                                                   symmetric=a_symmetric))
+        out_1, rep_1 = mvdram_gemv(aq1, wq, sparsity=sparsity, geom=GEOM,
+                                   reliable_cols=rel)
+        np.testing.assert_array_equal(np.asarray(out_b[b]), np.asarray(out_1))
+        req = rep.requests[b]
+        assert [c.asdict() for c in req.tile_runtime] \
+            == [c.asdict() for c in rep_1.tile_runtime]
+        assert [c.asdict() for c in req.tile_preload] \
+            == [c.asdict() for c in rep_1.tile_preload]
+        assert req.runtime.asdict() == rep_1.runtime.asdict()
+        assert req.preload.asdict() == rep_1.preload.asdict()
+        assert req.skipped_bits == rep_1.skipped_bits
+        assert req.waves == rep_1.waves
+        assert [c.asdict() for c in req.wave_max] \
+            == [c.asdict() for c in rep_1.wave_max]
+        oracle_ops += rep_1.runtime.pud_ops
+    # shared accounting: staging counted once; the batch ledger equals the
+    # INDEPENDENT per-request oracle totals (not a self-derived sum)
+    assert rep.shared_preload.asdict() == rep.requests[0].preload.asdict()
+    assert rep.runtime.pud_ops == oracle_ops
+    assert rep.amortized_preload_bits == \
+        (batch - 1) * rep.shared_preload.host_bits_written
+    assert rep.schedule.batch == batch
+    assert rep.schedule.reuse_factor == batch
+    # direct entry and 2-D dispatch agree
+    out_d, rep_d = mvdram_gemv_batched(aqb, wq, sparsity=sparsity, geom=GEOM,
+                                       reliable_cols=rel)
+    np.testing.assert_array_equal(np.asarray(out_b), np.asarray(out_d))
+    assert rep_d.runtime.asdict() == rep.runtime.asdict()
 
 
 @settings(max_examples=6, deadline=None)

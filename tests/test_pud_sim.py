@@ -10,7 +10,7 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.core.pud.adder import (add_row_at_offset, add_rows_batched_wave,
-                                  clear_accumulator)
+                                  adder_cost, clear_accumulator)
 from repro.core.pud.device import BankArray, OpCounts, Subarray
 from repro.core.pud.gemv import (PudGeometry, build_templates,
                                  conventional_pud_cost, encode_commands,
@@ -18,9 +18,9 @@ from repro.core.pud.gemv import (PudGeometry, build_templates,
                                  mvdram_gemv_subarray, mvdram_tile_cost,
                                  select_templates, usable_output_slots)
 from repro.core.pud.layout import HorizontalLayout, horizontal_capacity_report
-from repro.core.pud.schedule import schedule_tiles
+from repro.core.pud.schedule import schedule_batch, schedule_tiles
 from repro.core.pud.timing import (DDR4_2400, bank_waves, price_gemv,
-                                   simulated_wave_time)
+                                   price_gemv_batched, simulated_wave_time)
 from repro.core.quant import (QuantSpec, QuantizedTensor,
                               quantize_activations, quantize_weights,
                               quantized_gemv_reference)
@@ -404,3 +404,188 @@ def test_engine_handle_carries_templates(rng):
     o_t, _ = eng.gemv(h, a, mode="sim")
     o_n, _ = eng.gemv(h, a, mode="sim", naive=True)
     np.testing.assert_array_equal(np.asarray(o_t), np.asarray(o_n))
+
+
+# ---------------------------------------------------------------------------
+# Cross-request wave sharing (batched GeMV)
+# ---------------------------------------------------------------------------
+
+def test_schedule_batch_reuse_accounting():
+    geom = PudGeometry(channels=2, banks_per_channel=3)
+    bs = schedule_batch(n_chunks=4, col_chunks=4, batch=5, geom=geom)
+    assert bs.tiles == 16 and bs.waves == 3 and bs.batch == 5
+    # every request's tile t lands on the SAME slot — the base placement
+    assert bs.wave_members(0) == bs.base.wave_members(0)
+    assert bs.weight_loads == 16
+    assert bs.unshared_weight_loads == 80
+    assert bs.reuse_factor == 5.0
+    with pytest.raises(ValueError, match="batch must be >= 1"):
+        schedule_batch(2, 2, 0, geom)
+
+
+def test_batched_wave_counts_match_analytic_pricing():
+    """Shared-wave counterpart of test_wave_counts_match_analytic: at dense
+    activation bits the simulator's batched wave maxima equal B× the
+    per-tile closed form, the shared staging equals the analytic
+    weight_load_bits, and `price_gemv_batched` reconciles."""
+    geom = PudGeometry(subarray_cols=16, n_sub_max=32,
+                       channels=2, banks_per_channel=2)
+    q, p, n, m, B = 3, 4, 64, 12, 3
+    r = np.random.default_rng(7)
+    w_codes = r.integers(0, 2 ** q, size=(n, m)).astype(np.uint8)
+    wq = QuantizedTensor(values=jnp.asarray(w_codes),
+                         scale=jnp.ones((1, m), jnp.float32), zero=0,
+                         spec=QuantSpec(bits=q))
+    aq = QuantizedTensor(values=jnp.full((B, n), 2 ** p - 1, jnp.uint8),
+                         scale=jnp.ones((B, 1), jnp.float32), zero=0,
+                         spec=QuantSpec(bits=p))
+    out, rep = mvdram_gemv(aq, wq, geom=geom)
+    cost = mvdram_gemv_cost(m, n, q, p, bit_density=1.0, geom=geom,
+                            usable_cols=geom.subarray_cols)
+    assert rep.tiles == cost.tiles == 6
+    assert rep.waves == cost.waves == bank_waves(rep.tiles, geom) == 2
+    # dense bits → every request's tile equals the closed form; the shared
+    # wave is bound by the B time-shared streams of its slowest bank
+    for mx in rep.wave_max:
+        assert (mx.row_copy, mx.maj3, mx.maj5) == \
+            (B * cost.ops_per_tile.row_copy, B * cost.ops_per_tile.maj3,
+             B * cost.ops_per_tile.maj5)
+    t_sim = simulated_wave_time(rep, DDR4_2400)
+    t_analytic = cost.waves * B * cost.ops_per_tile.pud_ops * DDR4_2400.t_op
+    assert t_sim == pytest.approx(t_analytic)
+    # staging: simulated shared preload == analytic weight_load_bits, once
+    assert rep.shared_preload.host_bits_written == cost.weight_load_bits
+    priced = price_gemv_batched(cost, B, geom=geom)
+    assert priced.weight_load_bits == cost.weight_load_bits
+    assert priced.t_compute == pytest.approx(
+        max(t_analytic,
+            -(-cost.tiles // geom.channels) * B
+            * cost.ops_per_tile.pud_ops * DDR4_2400.t_cmd))
+    # one shared launch beats B independent re-staging launches
+    assert priced.amortization > 1.0
+    assert priced.t_sequential_total == pytest.approx(
+        B * (priced.sequential.t_total + priced.t_weight_load))
+    with pytest.raises(ValueError, match="batch must be >= 1"):
+        price_gemv_batched(cost, 0, geom=geom)
+
+
+def test_weight_load_bits_exact_on_ragged_shapes(rng):
+    """The analytic staging bits reconcile with the simulator's preload on
+    shapes whose last reduction chunk is ragged (n % n_sub != 0), not just
+    at aligned benchmark shapes."""
+    geom = PudGeometry(subarray_cols=16, n_sub_max=32,
+                       channels=2, banks_per_channel=2)
+    q, p, n, m = 3, 4, 40, 12          # chunks of 32 and 8 → ragged tail
+    w = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    wq = quantize_weights(w, QuantSpec(bits=q))
+    cost = mvdram_gemv_cost(m, n, q, p, geom=geom,
+                            usable_cols=geom.subarray_cols)
+    aq1 = quantize_activations(jnp.asarray(rng.normal(size=(n,)),
+                                           jnp.float32), QuantSpec(bits=p))
+    _, rep1 = mvdram_gemv(aq1, wq, geom=geom)
+    assert rep1.preload.host_bits_written == cost.weight_load_bits
+    A = jnp.asarray(rng.normal(size=(3, n)), jnp.float32)
+    aqb = quantize_activations(A, QuantSpec(bits=p))
+    _, repb = mvdram_gemv(aqb, wq, geom=geom)
+    assert repb.shared_preload.host_bits_written == cost.weight_load_bits
+
+
+def test_batched_gemv_rejects_oracle_flags(rng):
+    w = jnp.asarray(rng.normal(size=(16, 4)), jnp.float32)
+    A = jnp.asarray(rng.normal(size=(2, 16)), jnp.float32)
+    wq = quantize_weights(w, QuantSpec(bits=2))
+    aqb = quantize_activations(A, QuantSpec(bits=2))
+    with pytest.raises(ValueError, match="shared waves only"):
+        mvdram_gemv(aqb, wq, geom=GEOM, naive=True)
+    with pytest.raises(ValueError, match="shared waves only"):
+        mvdram_gemv(aqb, wq, geom=GEOM, wave=False)
+    with pytest.raises(ValueError, match="batched GeMV takes"):
+        from repro.core.pud.gemv import mvdram_gemv_batched
+        aq1 = quantize_activations(A[0], QuantSpec(bits=2))
+        mvdram_gemv_batched(aq1, wq, geom=GEOM)
+    with pytest.raises(ValueError, match=r"\(N,\) activation vector"):
+        bad = QuantizedTensor(values=jnp.zeros((2, 2, 16), jnp.uint8),
+                              scale=jnp.ones((2, 2, 1), jnp.float32),
+                              zero=2, spec=QuantSpec(bits=2))
+        mvdram_gemv(bad, wq, geom=GEOM)
+
+
+def test_bankarray_batched_ledger_and_shared_rows(rng):
+    """Batched BankArray: resident rows stay (tiles, rows, cols) — loaded
+    once — while the command ledger splits per (request, tile). Broadcast
+    commands appear in every request's view; per-request adds don't leak
+    across the batch axis."""
+    tiles, B, cols = 3, 2, 8
+    bank = BankArray(tiles, rows=16, cols=cols, batch=B)
+    assert bank.data.shape == (tiles, 16, cols)   # no per-request replicas
+    bank.host_write_row(0, np.ones(cols, np.uint8))
+    bank.row_copy(0, 1)
+    counts = bank.tile_counts()
+    assert len(counts) == B and len(counts[0]) == tiles
+    for b in range(B):
+        for t in range(tiles):
+            assert counts[b][t].row_copy == 1
+            assert counts[b][t].host_bits_written == cols
+    # per-(request, tile) adds: request 1 / tile 2 only
+    n_adds = np.zeros((B, tiles), np.int64)
+    n_adds[1, 2] = 4
+    bank.charge_adds(OpCounts(row_copy=10, maj3=2, maj5=2), n_adds)
+    counts = bank.tile_counts()
+    assert counts[1][2].row_copy == 1 + 40 and counts[1][2].maj3 == 8
+    assert counts[0][2].row_copy == 1 and counts[0][0].maj3 == 0
+    cm = bank.counts_matrix()
+    assert cm.shape == (B, tiles, 7)
+    assert cm[1, 2, 0] == 41
+
+
+def test_add_rows_batched_wave_batch_axis_matches_per_request(rng):
+    """The batched adder advances B accumulator values exactly as B
+    independent unbatched calls would, against the same resident rows; the
+    physical rows materialize the LAST request's accumulator."""
+    from repro.core.pud.adder import write_accumulator_wave
+    tiles, B, n_sub, p, cols = 3, 2, 5, 2, 12
+    lay = HorizontalLayout(n_sub=n_sub, m_sub=cols, q=1, p=p,
+                           subarray_cols=cols)
+    rows = rng.integers(0, 2, size=(tiles, n_sub, cols)).astype(np.uint8)
+    masks = rng.integers(0, 2, size=(B, tiles, n_sub)).astype(bool)
+
+    bank = BankArray(tiles, rows=lay.rows_used, cols=cols, batch=B)
+    bank.host_write_row(lay.zero_row, np.zeros(cols, np.uint8))
+    bank.host_write_row(lay.one_row, np.ones(cols, np.uint8))
+    bank.host_write_rows(lay.matrix_rows, rows)
+    bank.host_write_rows(lay.inv_matrix_rows, 1 - rows)
+    clear_accumulator(bank, lay)
+    acc = add_rows_batched_wave(bank, lay, masks, offset=1)
+    expect = (masks[:, :, :, None] * rows[None]).sum(axis=2) << 1
+    np.testing.assert_array_equal(acc, expect)
+    # unbatched per-request runs agree value-for-value
+    for b in range(B):
+        bank1 = BankArray(tiles, rows=lay.rows_used, cols=cols)
+        bank1.host_write_row(lay.zero_row, np.zeros(cols, np.uint8))
+        bank1.host_write_row(lay.one_row, np.ones(cols, np.uint8))
+        bank1.host_write_rows(lay.matrix_rows, rows)
+        bank1.host_write_rows(lay.inv_matrix_rows, 1 - rows)
+        clear_accumulator(bank1, lay)
+        acc1 = add_rows_batched_wave(bank1, lay, masks[b], offset=1)
+        np.testing.assert_array_equal(acc1, acc[b])
+    # rows hold the last time-shared occupant's accumulator (+ complements)
+    acc_rows = bank.data[:, np.asarray(lay.acc_rows)].astype(np.int64)
+    vals = (acc_rows * (1 << np.arange(lay.r, dtype=np.int64))[None, :, None]
+            ).sum(axis=1)
+    np.testing.assert_array_equal(vals, expect[-1])
+    acc_c = bank.data[:, np.asarray(lay.acc_c_rows)]
+    np.testing.assert_array_equal(acc_rows.astype(np.uint8) + acc_c,
+                                  np.ones_like(acc_c))
+    # per-(request, tile) billing follows each request's own popcounts
+    counts = bank.tile_counts()
+    per_add = adder_cost(lay.r - 1)
+    for b in range(B):
+        for t in range(tiles):
+            adds = int(masks[b, t].sum())
+            assert counts[b][t].maj3 == per_add.maj3 * adds
+    # all-zero batched masks still return a per-request (B, T, cols) track
+    acc0 = add_rows_batched_wave(
+        bank, lay, np.zeros((B, tiles, n_sub), bool), offset=0)
+    assert acc0.shape == (B, tiles, cols)
+    np.testing.assert_array_equal(acc0, np.broadcast_to(expect[-1],
+                                                        acc0.shape))

@@ -92,6 +92,77 @@ def test_scan_decode_matches_python_loop():
     np.testing.assert_array_equal(np.asarray(hot_scan), np.asarray(hot_loop))
 
 
+def test_masked_scan_bucketed_executables_across_requests():
+    """A bounded set of power-of-two-bucket decode executables serves every
+    (max_new, temperature) mix — the recompile-per-(steps, temperature)
+    problem is gone; tokens still match the loop oracle for each mix."""
+    cfg = dataclasses.replace(tiny_config("llama2-7b"), dtype="float32")
+    params = init_params(param_defs(cfg), KEY)
+    eng = ServeEngine(cfg, params, max_seq=40)
+    prompts = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size,
+                                 dtype=jnp.int32)
+    for max_new, temp, seed in [(4, 0.0, 0), (9, 0.0, 0), (6, 0.9, 5),
+                                (5, 1.3, 2)]:
+        got = eng.generate(prompts, max_new=max_new, temperature=temp,
+                           seed=seed)
+        want = eng.generate(prompts, max_new=max_new, temperature=temp,
+                            seed=seed, scan=False)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # trips 3, 8, 5, 4 → buckets {4, 8}: temperature/length changes reuse
+    # executables instead of compiling per (steps, temperature) pair
+    assert set(eng._decode_fns) == {4, 8}
+
+
+def test_masked_scan_per_lane_budgets():
+    """Per-lane length masks: a lane past its budget re-emits its frozen
+    token while other lanes keep generating; tokens inside every lane's
+    budget match the uniform run exactly."""
+    cfg = dataclasses.replace(tiny_config("llama2-7b"), dtype="float32")
+    params = init_params(param_defs(cfg), KEY)
+    eng = ServeEngine(cfg, params, max_seq=32)
+    prompts = jax.random.randint(KEY, (2, 6), 0, cfg.vocab_size,
+                                 dtype=jnp.int32)
+    full = np.asarray(eng.generate(prompts, max_new=8))
+    capped = np.asarray(eng.generate(prompts, max_new=8,
+                                     max_new_per_lane=[3, 8]))
+    np.testing.assert_array_equal(capped[1], full[1])     # uncapped lane
+    np.testing.assert_array_equal(capped[0, :6 + 3], full[0, :6 + 3])
+    assert (capped[0, 6 + 3:] == capped[0, 6 + 2]).all()  # frozen tail
+    # the Python loop oracle applies the same per-lane freeze
+    loop = np.asarray(eng.generate(prompts, max_new=8,
+                                   max_new_per_lane=[3, 8], scan=False))
+    np.testing.assert_array_equal(capped, loop)
+
+
+def test_generate_rejects_cache_overflow():
+    cfg = tiny_config("llama2-7b")
+    params = init_params(param_defs(cfg), KEY)
+    eng = ServeEngine(cfg, params, max_seq=16)
+    with pytest.raises(ValueError, match="cache horizon"):
+        eng.generate(jnp.zeros((1, 8), jnp.int32), max_new=16)
+
+
+def test_quantized_linears_route_through_mvdram_engine():
+    """Quantized serving installs EngineLinear: every lane-batched
+    bit-plane linear traces through MVDRAMEngine.linear (counted at trace
+    time), and generation still matches the dense model at 8 bits."""
+    cfg = dataclasses.replace(tiny_config("llama2-7b"), dtype="float32",
+                              weight_bits=8)
+    params = init_params(param_defs(cfg), KEY)
+    prompts = jax.random.randint(KEY, (2, 8), 0, cfg.vocab_size,
+                                 dtype=jnp.int32)
+    eng = ServeEngine(cfg, params, max_seq=32, quantized=True)
+    assert eng.mvdram is not None
+    toks = eng.generate(prompts, max_new=8)
+    assert toks.shape == (2, 16)
+    # prefill + decode traces each route the model's quantized linears
+    assert eng.mvdram.routed_linears > 0
+    dense_eng = ServeEngine(cfg, params, max_seq=32, quantized=False)
+    assert dense_eng.mvdram is None
+    agree = float((toks == dense_eng.generate(prompts, max_new=8)).mean())
+    assert agree > 0.8, agree
+
+
 def test_scan_decode_single_token_edge():
     cfg = tiny_config("llama2-7b")
     params = init_params(param_defs(cfg), KEY)

@@ -10,10 +10,19 @@ the ≥5× acceptance floor, bit-identical outputs AND per-tile OpCounts;
 launches at the same banked geometry — asserting the ≥2× amortization
 floor, per-request outputs AND per-tile OpCounts bit-identical to the
 sequential oracle, and `price_gemv_batched`'s amortized weight staging
-reconciling with the simulator's shared-wave counts; and (4) the MXU dots
+reconciling with the simulator's shared-wave counts; (4) multi-layer
+RESIDENT decode: a 4-layer block compiled into one `GemvProgram` (weights
+staged once by the residency pool, q/k/v waves fused) vs per-layer
+sequential staging — asserting the ≥1.5× wall-clock floor, bit-identical
+outputs/per-tile runtime OpCounts, ZERO repeated weight staging, and exact
+staging reconciliation against the pool placements; and (5) the MXU dots
 issued per tile by the bit-serial Pallas kernel's decomposed schedule vs
 the §V-D code-dot fast path (q·p vs q), plus measured interpret-mode
 wall-clock for both fidelities.
+
+    PYTHONPATH=src python -m benchmarks.sim_bench --json
+        runs everything and writes BENCH_sim.json (per-shape wall-clock +
+        speedup ratios) so the perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -23,6 +32,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.bitplane import make_bitplane_weights
+from repro.core.engine import MVDRAMEngine
 from repro.core.pud.gemv import PudGeometry, mvdram_gemv, mvdram_gemv_cost
 from repro.core.pud.timing import price_gemv_batched
 from repro.core.quant import (QuantSpec, quantize_activations,
@@ -162,6 +172,76 @@ def sim_batched_wave_sharing(emit):
         f"amortization {amortization:.2f}x below the 2x floor"
 
 
+def sim_resident_decode(emit):
+    """Multi-layer resident decode (residency sessions, ISSUE 4): a 4-layer
+    block — a q/k/v-style concurrency group of three 512→256 linears plus a
+    256→512 down projection, q=4/p=2, B=2 lanes — compiled into one
+    `GemvProgram` whose weights were staged ONCE at placement, vs the same
+    four GeMVs launched sequentially with per-call staging. Outputs and
+    per-tile runtime OpCounts must be bit-identical; the resident step must
+    re-stage NOTHING (reconciled exactly against the pool placements and
+    the per-call oracle's preload); measured wall-clock amortization and
+    the priced residency speedup (real-DRAM columns, fused q/k/v waves)
+    must clear the ≥1.5× floor."""
+    B, q_b, p_b = 2, 4, 2
+    rng = np.random.default_rng(5)
+    eng = MVDRAMEngine(geom=BANKED)
+    shapes = [(N, M), (N, M), (N, M), (M, N)]
+    hs = []
+    for i, (n, m) in enumerate(shapes):
+        w = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+        hs.append(eng.register(f"layer{i}", w, QuantSpec(bits=q_b),
+                               a_spec=QuantSpec(bits=p_b)))
+    prog = eng.compile(hs, groups=[[0, 1, 2], [3]])
+    X = [jnp.asarray(rng.normal(size=(B, n)), jnp.float32)
+         for (n, _m) in shapes]
+    aqs = [quantize_activations(x, QuantSpec(bits=p_b)) for x in X]
+
+    def run_seq():
+        return [mvdram_gemv(aq, h.wq, geom=BANKED, templates=h.templates)
+                for aq, h in zip(aqs, hs)]
+
+    prog.run(X)     # warm: staging done, caches hot
+    run_seq()
+    t_prog, (outs, prep) = _best_of(lambda: prog.run(X))
+    t_seq, refs = _best_of(run_seq)
+
+    bit_identical = all(
+        np.array_equal(np.asarray(out), np.asarray(o_ref))
+        and [c.asdict() for c in rep.requests[b].tile_runtime]
+            == [c.asdict() for c in r_ref.requests[b].tile_runtime]
+        for out, rep, (o_ref, r_ref) in zip(outs, prep.reports, refs)
+        for b in range(B))
+    zero_restaging = (prep.repeated_staging.host_bits_written == 0
+                      and all(r.shared_preload.host_bits_written == 0
+                              for r in prep.reports))
+    # exact three-way staging reconciliation: program == pool placements ==
+    # what the per-call oracle re-pays every launch
+    staged = prep.staged.host_bits_written
+    staging_match = (
+        staged == sum(h.placement.staged.host_bits_written for h in hs)
+        == sum(r_ref.shared_preload.host_bits_written for _o, r_ref in refs))
+    priced = eng.price_program(prog, batch=B, usable_cols=BANKED.real_cols)
+
+    amortization = t_seq / t_prog
+    emit("sim.resident_seq_4layer_q4p2_b2_ms", t_seq * 1e3)
+    emit("sim.resident_program_4layer_q4p2_b2_ms", t_prog * 1e3)
+    emit("sim.resident_amortization_x", amortization,
+         f"bit_identical={bit_identical} zero_restaging={zero_restaging} "
+         f"staged_bits={staged} staging_match={staging_match}")
+    emit("sim.resident_price_speedup_x", priced.residency_speedup,
+         f"waves={priced.waves} waves_shared={priced.waves_shared} "
+         f"weight_load_bits={priced.weight_load_bits}")
+    assert bit_identical, "resident program diverged from per-layer oracle"
+    assert zero_restaging, "resident decode step re-staged weight rows"
+    assert staging_match, "placement staging != oracle preload accounting"
+    assert priced.weight_load_bits == 0
+    assert amortization >= 1.5, \
+        f"amortization {amortization:.2f}x below the 1.5x floor"
+    assert priced.residency_speedup >= 1.5, \
+        f"priced speedup {priced.residency_speedup:.2f}x below the 1.5x floor"
+
+
 def kernel_dots_issued(emit):
     rng = np.random.default_rng(1)
     w = jnp.asarray(rng.normal(size=(N, M)), jnp.float32)
@@ -191,4 +271,64 @@ def kernel_dots_issued(emit):
 
 
 ALL = [sim_vectorized_vs_naive, sim_wave_vs_sequential,
-       sim_batched_wave_sharing, kernel_dots_issued]
+       sim_batched_wave_sharing, sim_resident_decode, kernel_dots_issued]
+
+
+# ---------------------------------------------------------------------------
+# Machine-readable output: BENCH_sim.json tracks the perf trajectory
+# ---------------------------------------------------------------------------
+
+def main() -> None:
+    import argparse
+    import json
+    import platform
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", nargs="?", const="BENCH_sim.json",
+                    default=None, metavar="PATH",
+                    help="write per-shape wall-clock + speedup rows as JSON "
+                         "(default path: BENCH_sim.json)")
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark function names")
+    args = ap.parse_args()
+
+    rows: list = []
+
+    def emit(name, value, derived=""):
+        rows.append({"name": name, "value": value, "derived": derived})
+        v = f"{value:.6g}" if isinstance(value, float) else value
+        print(f"{name},{v},{derived}")
+
+    errors = []
+    for fn in ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        try:
+            fn(emit)
+        except Exception as e:  # noqa: BLE001 — record and continue
+            errors.append({"bench": fn.__name__, "error": repr(e)[:200]})
+            print(f"{fn.__name__}.ERROR,0,{repr(e)[:200]}")
+    if args.json:
+        doc = {
+            "schema": 1,
+            "suite": "sim_bench",
+            "platform": platform.platform(),
+            "python": platform.python_version(),
+            "rows": rows,
+            "errors": errors,
+            "speedups": {r["name"]: r["value"] for r in rows
+                         if r["name"].endswith(("_x", "_speedup"))},
+            "wall_clock_ms": {r["name"]: r["value"] for r in rows
+                              if r["name"].endswith("_ms")},
+        }
+        with open(args.json, "w") as f:
+            json.dump(doc, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}: {len(rows)} rows, "
+              f"{len(errors)} errors")
+    if errors:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@
 import jax
 import jax.numpy as jnp
 
+from repro.core import backends
 from repro.core.engine import MVDRAMEngine
 from repro.core.pud.gemv import PudGeometry
 from repro.core.quant import QuantSpec
@@ -30,9 +31,9 @@ engine = MVDRAMEngine(geom=PudGeometry(subarray_cols=256))
 handle = engine.register("ffn_up", w, w_spec=QuantSpec(bits=3),
                          a_spec=QuantSpec(bits=4))
 
-out_sim, report = engine.gemv(handle, a, mode="sim")
-out_jnp = engine.gemv(handle, a, mode="jnp")
-out_pal = engine.gemv(handle, a[None], mode="pallas")[0]
+out_sim, report = engine.gemv(handle, a, backend=backends.SIM)
+out_jnp = engine.gemv(handle, a, backend=backends.JNP)
+out_pal = engine.gemv(handle, a[None], backend=backends.PALLAS)[0]
 
 print("=== correctness (three backends) ===")
 print("PUD sim vs jnp oracle  max|Δ|:",

@@ -1,0 +1,83 @@
+"""Residency sessions: place-then-execute decode through the MVDRAM engine.
+
+The paper's end-to-end wins come from weights LIVING in DRAM across the
+whole pipeline (§IV, §VI). This example walks the new two-phase API:
+
+  ① place    register every linear of a small transformer block — the
+             engine's `DramPool` gives each matrix a persistent
+             (channel, bank, row-range) home; heterogeneous shapes
+             co-reside in one pool
+  ② compile  fuse the block's GeMV sequence into one `GemvProgram`
+             (q/k/v share waves; weight rows staged exactly once)
+  ③ decode   run decode steps against the resident rows — zero weight
+             re-staging, outputs bit-identical to per-layer `gemv`
+
+    PYTHONPATH=src python examples/resident_decode.py
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.backends import SIM
+from repro.core.engine import MVDRAMEngine
+from repro.core.pud.gemv import PudGeometry
+from repro.core.quant import QuantSpec
+
+rng = np.random.default_rng(0)
+geom = PudGeometry(subarray_cols=64, n_sub_max=32)
+engine = MVDRAMEngine(geom=geom)
+
+# -- ① place: a block's linears co-reside in one DramPool --------------------
+D, H, F = 256, 192, 512
+layers = {
+    "blk0/wq": (D, H), "blk0/wk": (D, H), "blk0/wv": (D, H),
+    "blk0/wo": (H, D),
+    "blk0/up": (D, F), "blk0/gate": (D, F), "blk0/down": (F, D),
+}
+handles = []
+for name, (n, m) in layers.items():
+    w = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    handles.append(engine.register(name, w, QuantSpec(bits=4),
+                                   a_spec=QuantSpec(bits=2)))
+stats = engine.residency_stats()
+print(f"pool: {stats['placements']} resident matrices, "
+      f"{stats['used_rows']}/{stats['total_rows']} rows "
+      f"({stats['utilization']:.2%}), staged {stats['staged_bits']} bits once")
+
+# -- ② compile: one fused decode program (q/k/v and up/gate share waves) -----
+program = engine.compile(
+    handles, groups=[[0, 1, 2], [3], [4, 5], [6]])
+print(f"program: {program}")
+
+# -- ③ decode: resident steps, zero re-staging -------------------------------
+B = 2
+for step in range(3):
+    acts = [jnp.asarray(rng.normal(size=(B, n)), jnp.float32)
+            for (n, _m) in layers.values()]
+    outs, report = program.run(acts)
+    print(f"step {step}: {len(outs)} GeMVs, "
+          f"re-staged bits = {report.repeated_staging.host_bits_written} "
+          f"(one-time placement staging was "
+          f"{report.staged.host_bits_written})")
+
+# the per-call oracle re-pays the staging EVERY launch — same outputs
+from repro.core.pud.gemv import mvdram_gemv
+from repro.core.quant import quantize_activations
+
+h0 = handles[0]
+x0 = jnp.asarray(rng.normal(size=(B, D)), jnp.float32)
+out_res, rep_res = engine.gemv(h0, x0, backend=SIM)    # resident: 0 staging
+aq0 = quantize_activations(x0, QuantSpec(bits=2))
+out_fresh, rep_fresh = mvdram_gemv(aq0, h0.wq, geom=geom)  # fresh staging
+assert np.array_equal(np.asarray(out_res), np.asarray(out_fresh))
+print(f"same launch: resident stages "
+      f"{rep_res.shared_preload.host_bits_written} bits, per-call oracle "
+      f"re-stages {rep_fresh.shared_preload.host_bits_written} bits "
+      f"(outputs bit-identical)")
+
+# priced: one fused resident step vs per-layer re-staging at real DRAM width
+cost = engine.price_program(program, batch=B,
+                            usable_cols=geom.real_cols)
+print(f"priced decode step: {cost.t_total * 1e3:.3f} ms resident vs "
+      f"{cost.t_sequential_total * 1e3:.3f} ms per-layer re-staging "
+      f"({cost.residency_speedup:.2f}x; {cost.waves_shared} waves fused, "
+      f"weight_load_bits={cost.weight_load_bits})")

@@ -1,43 +1,52 @@
-"""MVDRAMEngine — the system-level orchestrator (paper §IV).
+"""MVDRAMEngine — the system-level orchestrator (paper §IV), redesigned
+around explicit two-phase PLACE-THEN-EXECUTE residency sessions.
 
-The engine owns everything the paper's "processor + unmodified DRAM" pair
-does around a GeMV:
+Phase ① — place (`register` / `register_packed`): quantize + bit-plane-pack
+a weight matrix, build the partition plan (N≤128 per subarray, q·M per
+column budget — §VII "Matrix Partitioning"), and give the matrix a
+PERSISTENT home in the DRAM geometry: the engine's `DramPool`
+(core.pud.residency) carves subarray row ranges out of each (channel, bank)
+for the matrix's tiles, detects collisions, accounts free/used capacity,
+and can evict least-recently-used residents. ALL the linears of a model
+config co-reside at once, heterogeneous shapes included — the pool rotates
+the §VII bank cursor across registrations so co-resident layers stagger
+over the rank.
 
-  register()   quantize + bit-plane-pack a weight matrix, build the partition
-               plan (N≤128 per subarray, q·M per column budget, channel/bank
-               placement — §VII "Matrix Partitioning"), i.e. step ① of the
-               execution flow (weights pre-loaded into DRAM).
-  gemv()       steps ②–④: encode the activation into the operation schedule,
-               execute, aggregate. Three interchangeable backends:
-                 mode="sim"    — bit-exact PUD command-stream simulation
-                                 (numpy; small shapes; the ground truth)
-                 mode="jnp"    — pure-jnp bit-plane oracle (any shape; the
-                                 reference for the Pallas kernel)
-                 mode="pallas" — the TPU kernel (kernels/bitplane_gemv)
-  price()      DDR4 timing+energy for the planned GeMV and the CPU/GPU
-               baselines (benchmarks read Fig. 12/13/14 from this).
+Phase ② — execute: `gemv()` runs one resident GeMV (steps ②–④ of the
+paper's flow: encode, execute, aggregate), and `compile([...handles...])`
+fuses a decode step's SEQUENCE of resident GeMVs into one `GemvProgram`
+whose interleaved command schedule extends the wave slots across layers
+(`schedule.schedule_program`). The simulator then runs a whole transformer
+block against the staged rows layer by layer without re-staging any weight
+— zero repeated staging, reconciled exactly against the placement's
+one-time `staged` accounting. Outputs and per-tile command counts are
+invariant to wave packing, so the FUSED schedule's effect is timing:
+`timing.price_program` prices it, including cross-layer command-bus
+interleaving and the boundary waves concurrency groups share.
 
-All backends compute the same mathematics and agree to fp tolerance
-(bit-exactly in the integer domain); tests/test_engine.py holds the proofs.
+Execution backends are first-class `Backend` objects (core.backends): jnp
+oracle / Pallas kernel / PUD simulator, resolved through one registry. The
+old string `mode=` kwargs keep working through deprecation shims that
+route into the same registry.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Sequence, Union
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from .bitplane import (BitplaneWeights, bitplane_gemv_bitserial,
-                       bitplane_gemv_f32, from_quantized, to_quantized)
-from .pud.gemv import (CommandTemplates, GemvCost, PudGeometry,
-                       build_templates, conventional_pud_cost, mvdram_gemv,
-                       mvdram_gemv_cost)
-from .pud.schedule import schedule_tiles
+from . import backends as _backends
+from .backends import Backend
+from .bitplane import BitplaneWeights, from_quantized, to_quantized
+from .pud.gemv import (CommandTemplates, GemvCost, PudGeometry, StagedWaves,
+                       build_templates, conventional_pud_cost,
+                       mvdram_gemv_batched, mvdram_gemv_cost, stage_matrix)
+from .pud.residency import DramPool, Placement
+from .pud.schedule import ProgramSchedule, schedule_program, schedule_tiles
 from .pud.timing import (DDR4_2400, CpuBaseline, DDR4Model, GpuBaseline,
-                         PudCost, price_gemv)
+                         ProgramCost, price_gemv, price_program)
 from .quant import (QuantSpec, QuantizedTensor, quantize_activations,
                     quantize_weights)
 
@@ -67,13 +76,6 @@ class PartitionPlan:
         return [(a.channel, a.bank, a.wave) for a in sched.assignments]
 
 
-def _pallas_impl() -> str:
-    """Kernel backend for mode="pallas": the real TPU kernel on TPU, the
-    interpret-mode kernel body elsewhere (single source of truth for the
-    engine's gemv() and serving linear())."""
-    return "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"
-
-
 def make_plan(m: int, n: int, q: int, p: int,
               geom: PudGeometry, usable_cols: Optional[int] = None
               ) -> PartitionPlan:
@@ -88,12 +90,17 @@ def make_plan(m: int, n: int, q: int, p: int,
 
 @dataclasses.dataclass
 class GemvHandle:
-    """A weight matrix registered with the engine (resident "in DRAM").
+    """A weight matrix registered with the engine — RESIDENT in DRAM.
 
     `templates` are the static per-bit-offset command templates (§V-C) for
     this matrix's tile shape, precomputed at registration so per-inference
     work is popcount selection only (§V-D). None for float activations —
     there is no bit-serial command stream to template.
+
+    `placement` is the matrix's persistent home in the engine's `DramPool`
+    (phase ① of place-then-execute): per-tile (channel, bank) assignments
+    plus the row spans its bit-planes occupy, with the one-time staging
+    traffic recorded in `placement.staged`.
     """
 
     name: str
@@ -102,6 +109,116 @@ class GemvHandle:
     plan: PartitionPlan
     a_spec: Optional[QuantSpec]  # None => float activations (w-bit / a-fp)
     templates: Optional[CommandTemplates] = None
+    placement: Optional[Placement] = None
+
+
+@dataclasses.dataclass
+class ProgramReport:
+    """Accounting for decode steps executed through a `GemvProgram`.
+
+    `reports[l]` is the layer's resident `BatchReport`: outputs and
+    per-tile runtime OpCounts bit-identical to a sequential per-layer
+    `gemv`, but with ZERO weight staging (`shared_preload` empty) — the
+    staging was paid ONCE at placement and is recorded in `staged`, which
+    reconciles exactly with both the pool's `Placement.staged` spans and
+    the per-call oracle's summed `TileReport.preload` (tested).
+    """
+
+    reports: tuple             # (L,) resident BatchReport
+
+    @property
+    def layers(self) -> int:
+        return len(self.reports)
+
+    @property
+    def staged(self):
+        """One-time placement staging behind this step (already paid)."""
+        from .pud.device import OpCounts
+        total = OpCounts()
+        for r in self.reports:
+            if r.staged is not None:
+                total = total.merge(r.staged)
+        return total
+
+    @property
+    def repeated_staging(self):
+        """Weight staging paid BY this decode step — zero for residents."""
+        from .pud.device import OpCounts
+        total = OpCounts()
+        for r in self.reports:
+            total = total.merge(r.shared_preload)
+        return total
+
+
+class GemvProgram:
+    """A decode step's sequence of resident GeMVs, compiled once.
+
+    Built by `MVDRAMEngine.compile`: the layers' tile grids fuse into one
+    interleaved wave schedule (`ProgramSchedule` — concurrency groups like
+    q/k/v or up/gate share boundary waves), and each layer's weight
+    bit-planes are staged into resident `BankArray`s exactly once. `run`
+    then executes any number of decode steps against those rows with zero
+    re-staging — layer by layer through the staged executor, since outputs
+    and per-tile command counts don't depend on wave packing; the fused
+    schedule itself is the program's COMMAND/TIMING model, which `price`
+    evaluates (one fused step vs the per-layer re-staging baseline).
+    """
+
+    def __init__(self, engine: "MVDRAMEngine", handles: tuple,
+                 sched: ProgramSchedule, groups: tuple):
+        self.engine = engine
+        self.handles = handles
+        self.sched = sched
+        self.groups = groups
+        self.steps = 0
+
+    @property
+    def layers(self) -> int:
+        return len(self.handles)
+
+    def __repr__(self):
+        return (f"<GemvProgram {self.layers} layers, "
+                f"{self.sched.tiles} tiles, {self.sched.waves} waves "
+                f"({self.sched.waves_shared} shared)>")
+
+    def run(self, activations: Sequence[jax.Array]):
+        """Execute one decode step: activations[l] is layer l's (B, N_l)
+        lane batch (or an (N_l,) vector, promoted to B=1). Returns
+        ([(B, M_l) outputs], `ProgramReport`) — outputs and per-tile
+        runtime OpCounts bit-identical to sequential per-layer `gemv`,
+        with no weight row re-staged (tested)."""
+        import jax.numpy as jnp
+        if len(activations) != self.layers:
+            raise ValueError(
+                f"{len(activations)} activations for a {self.layers}-layer "
+                f"program")
+        outs, reports = [], []
+        for h, x in zip(self.handles, activations):
+            if h.a_spec is None:
+                raise ValueError(
+                    f"layer {h.name!r} serves float activations — there is "
+                    f"no bit-serial command stream to run in the simulator")
+            x = jnp.asarray(x)
+            squeeze = x.ndim == 1
+            if squeeze:
+                x = x[None, :]
+            staged = self.engine.staged_for(h)
+            if staged is None:
+                raise ValueError(
+                    f"layer {h.name!r} is no longer resident (evicted?); "
+                    f"re-register it before running the program")
+            # the same resident launch the sim backend executes
+            out, rep = self.engine.run_resident(h, x, staged)
+            outs.append(jnp.asarray(out[0] if squeeze else out))
+            reports.append(rep)
+        self.steps += 1
+        return outs, ProgramReport(reports=tuple(reports))
+
+    def price(self, bit_density: float = 0.5, batch: int = 1,
+              usable_cols: Optional[int] = None) -> ProgramCost:
+        return self.engine.price_program(self, bit_density=bit_density,
+                                         batch=batch,
+                                         usable_cols=usable_cols)
 
 
 class MVDRAMEngine:
@@ -111,22 +228,41 @@ class MVDRAMEngine:
                  timing: DDR4Model = DDR4_2400,
                  cpu: CpuBaseline = CpuBaseline(),
                  gpu: GpuBaseline = GpuBaseline(),
-                 sparsity: bool = True):
+                 sparsity: bool = True,
+                 pool: Optional[DramPool] = None,
+                 on_full: str = "evict"):
         self.geom = geom
         self.timing = timing
         self.cpu = cpu
         self.gpu = gpu
         self.sparsity = sparsity
+        self.pool = pool if pool is not None else DramPool(geom)
+        self.on_full = on_full
         self.handles: dict[str, GemvHandle] = {}
+        self._staged: dict[str, StagedWaves] = {}
+        self._leaf_names: dict[tuple, str] = {}  # serving leaf id → handle
         self.routed_linears = 0   # serving linears traced through linear()
+        # pool-driven evictions (LRU on_full, replace) must drop the staged
+        # rows and invalidate the handle's placement just like engine.evict
+        self.pool.evict_listeners.append(self._on_pool_evict)
 
-    # -- step ①: weights into "DRAM" -----------------------------------------
+    def _on_pool_evict(self, name: str, placement: Placement) -> None:
+        self._staged.pop(name, None)
+        self._leaf_names = {k: v for k, v in self._leaf_names.items()
+                            if v[0] != name}
+        h = self.handles.get(name)
+        if h is not None and h.placement is placement:
+            h.placement = None
+
+    # -- phase ①: place (weights into "DRAM") ---------------------------------
 
     def register(self, name: str, w: jax.Array, w_spec: QuantSpec,
                  a_spec: Optional[QuantSpec] = None) -> GemvHandle:
         """Quantize + pack an (N, M) weight matrix; build the partition plan
         and the static command templates (quantize ONCE — the packed planes
-        are derived from the same codes the simulator executes on)."""
+        are derived from the same codes the simulator executes on), and
+        PLACE the matrix in the residency pool. Re-registering a name
+        evicts its previous placement first."""
         wq = quantize_weights(w, w_spec)
         return self._install(name, from_quantized(wq), wq, a_spec)
 
@@ -142,100 +278,214 @@ class MVDRAMEngine:
                 "(q, N//32, M)); stacked expert leaves are served per-expert")
         return self._install(name, bw, to_quantized(bw), a_spec)
 
+    def _sim_grid(self, n: int, m: int, q: int):
+        """The matrix's tile grid at the SIMULATED geometry (what executes
+        and what the pool places): per-chunk reduction rows + col chunks."""
+        n_sub = min(self.geom.n_sub_max, n)
+        n_chunks = math.ceil(n / n_sub)
+        chunk_rows = [min((ci + 1) * n_sub, n) - ci * n_sub
+                      for ci in range(n_chunks)]
+        m_per_tile = self.geom.subarray_cols // q
+        return chunk_rows, math.ceil(m / max(m_per_tile, 1))
+
     def _install(self, name: str, bw: BitplaneWeights, wq: QuantizedTensor,
                  a_spec: Optional[QuantSpec]) -> GemvHandle:
         """Shared tail of both registration entries: one plan/template/
-        handle construction so the sim and kernel paths can't diverge."""
+        placement/handle construction so the sim and kernel paths can't
+        diverge."""
         p = a_spec.bits if a_spec is not None else 16
         plan = make_plan(m=bw.m, n=bw.n, q=bw.bits, p=p, geom=self.geom)
         templates = (build_templates(plan.n_sub, p)
                      if a_spec is not None else None)
+        chunk_rows, col_chunks = self._sim_grid(bw.n, bw.m, bw.bits)
+        placement = self.pool.place(
+            name, chunk_rows, col_chunks,
+            replace=(name in self.handles or self.pool.is_resident(name)),
+            on_full=self.on_full)
+        self._staged.pop(name, None)
         h = GemvHandle(name=name, weights=bw, wq=wq, plan=plan, a_spec=a_spec,
-                       templates=templates)
+                       templates=templates, placement=placement)
         self.handles[name] = h
+        if a_spec is not None:
+            # the sim-audit route resolves weight leaves by identity, so a
+            # leaf the serving layer already placed is never re-registered
+            # (no duplicate pool rows / double staging). The map holds a
+            # strong reference to the planes array — a live entry's id can
+            # never be recycled onto a different leaf — and entries are
+            # pruned on eviction.
+            self._leaf_names[(id(bw.planes), a_spec.bits)] = (name, bw.planes)
         return h
 
-    # -- steps ②–④: encode, execute, aggregate -------------------------------
+    def evict(self, handle: Union[GemvHandle, str]) -> Placement:
+        """Retire a matrix from residency (its handle stays registered for
+        the kernel backends; the sim falls back to per-call staging). The
+        staged rows and the handle's placement drop via the pool's evict
+        listener — the same path pool-driven LRU evictions take."""
+        h = self.handles[handle] if isinstance(handle, str) else handle
+        return self.pool.evict(h.name)
 
-    def gemv(self, handle: GemvHandle | str, a: jax.Array,
-             mode: str = "jnp", fidelity: str = "code",
+    def staged_for(self, handle: Union[GemvHandle, str]
+                   ) -> Optional[StagedWaves]:
+        """The handle's resident staged rows — built lazily on first use,
+        then reused by every launch (zero re-staging). None when the
+        matrix is not resident (evicted) or serves float activations.
+
+        A STALE handle — its name has since been re-registered with other
+        weights — is rejected loudly: silently staging the old matrix
+        under the current name would poison the cache for every later
+        launch of the new registration."""
+        h = self.handles[handle] if isinstance(handle, str) else handle
+        if self.handles.get(h.name) is not h:
+            raise ValueError(
+                f"stale handle {h.name!r}: the name was re-registered with "
+                f"different weights; re-compile programs against the "
+                f"current handle")
+        if (h.a_spec is None or h.placement is None
+                or self.pool.placements.get(h.name) is not h.placement):
+            return None
+        if h.name not in self._staged:
+            self._staged[h.name] = stage_matrix(
+                h.wq, h.a_spec.bits, geom=self.geom)
+        return self._staged[h.name]
+
+    # -- phase ②: execute (encode, execute, aggregate) ------------------------
+
+    def gemv(self, handle: Union[GemvHandle, str], a: jax.Array,
+             backend: Union[Backend, str, None] = None,
+             mode: Optional[str] = None, fidelity: str = "code",
              naive: bool = False, wave: Optional[bool] = None):
         """Execute the registered GeMV on a (N,) activation vector or a
-        (B, N) lane batch — all three backends take the batch axis:
+        (B, N) lane batch through a `Backend` (core.backends):
 
-          jnp/pallas  the batched kernel grid (one launch, B rows)
-          sim         the shared-wave path (`mvdram_gemv_batched`): weight
-                      rows staged once per wave, B command streams ride the
-                      batch axis; returns ((B, M), BatchReport)
+          JNP      the batched jnp bit-plane oracle
+          PALLAS   the TPU kernel grid (one launch, B rows)
+          SIM      the PUD simulator — a (B, N) lane batch executes against
+                   the handle's RESIDENT staged rows (zero re-staging;
+                   `BatchReport.resident`), a (N,) vector runs the per-call
+                   staging oracle; returns (out, report)
 
         `fidelity` selects the Pallas bit-serial schedule ("code" = q dots
         via the §V-D linearity collapse, "bitserial" = decomposed q·p);
         `naive=True` runs the sim micro-op by micro-op (the oracle); `wave`
-        toggles the sim's wave-parallel BankArray dispatch (default on when
-        not naive). Both oracles are single-vector only."""
+        toggles the sim's wave-parallel BankArray dispatch. `mode=` string
+        kwargs are a deprecated shim into the same registry."""
         h = self.handles[handle] if isinstance(handle, str) else handle
-        if mode == "jnp":
-            if h.a_spec is None:
-                return bitplane_gemv_f32(a, h.weights)
-            aq = quantize_activations(a, h.a_spec)
-            return bitplane_gemv_bitserial(aq, h.weights)
-        if mode == "pallas":
-            from ..kernels.bitplane_gemv import ops as bp_ops
-            impl = _pallas_impl()
-            if h.a_spec is None:
-                return bp_ops.bitplane_gemv(a, h.weights, impl=impl)
-            return bp_ops.bitplane_gemv_bitserial(a, h.weights, h.a_spec,
-                                                  impl=impl,
-                                                  fidelity=fidelity)
-        if mode == "sim":
-            if h.a_spec is None:
-                raise ValueError("PUD simulation needs quantized activations")
-            if a.ndim not in (1, 2):
-                raise ValueError(
-                    f"sim backend takes a (N,) vector or a (B, N) lane "
-                    f"batch, got shape {tuple(a.shape)}")
-            aq = quantize_activations(a, h.a_spec)
-            out, report = mvdram_gemv(aq, h.wq, sparsity=self.sparsity,
-                                      geom=self.geom, naive=naive,
-                                      templates=h.templates, wave=wave)
-            return jnp.asarray(out), report
-        raise ValueError(f"unknown mode {mode!r}")
+        be = _backends.resolve(backend, mode)
+        self.pool.touch(h.name)
+        return be.gemv(self, h, a, fidelity=fidelity, naive=naive, wave=wave)
+
+    def run_resident(self, handle: GemvHandle, x: jax.Array,
+                     staged: StagedWaves):
+        """One resident lane-batched launch against already-staged rows —
+        the single execution path shared by the sim backend and compiled
+        `GemvProgram` steps (zero weight re-staging)."""
+        aq = quantize_activations(x, handle.a_spec)
+        out, report = mvdram_gemv_batched(
+            aq, handle.wq, sparsity=self.sparsity, geom=self.geom,
+            templates=handle.templates, staged=staged)
+        self.pool.touch(handle.name)
+        return out, report
 
     # -- serving-side routing --------------------------------------------------
 
     def linear(self, x: jax.Array, w: BitplaneWeights,
-               act_bits: Optional[int] = None, mode: str = "jnp"):
+               act_bits: Optional[int] = None,
+               backend: Union[Backend, str, None] = None,
+               mode: Optional[str] = None):
         """One lane-batched quantized linear, routed through the engine.
 
         This is the entry `models.layers.dense` calls (via `EngineLinear`)
         for every `BitplaneWeights` leaf when a `ServeEngine` owns an
         MVDRAM engine: x (..., N) — typically the (lanes, N) decode batch —
         executes as ONE batched GeMV launch per weight. jit-safe for
-        jnp/pallas; `mode="sim"` additionally requires concrete values and
-        a 2-D x (the shared-wave simulator path, for audits)."""
-        from ..kernels.bitplane_gemv import ops as bp_ops
+        jnp/pallas; the sim backend additionally requires concrete values
+        and a 2-D x (the resident shared-wave simulator path, for audits).
+        """
         self.routed_linears += 1
-        if mode == "sim":
-            if not act_bits:
+        return _backends.resolve(backend, mode).linear(self, x, w, act_bits)
+
+    def sim_linear(self, x: jax.Array, w: BitplaneWeights,
+                   act_bits: int) -> jax.Array:
+        """The sim backend's audit route: resolve (or lazily place) the
+        weight leaf as a resident handle and execute against its staged
+        rows. The identity key carries act_bits: the same leaf served at
+        different activation precisions gets distinct registrations."""
+        entry = self._leaf_names.get((id(w.planes), act_bits))
+        if entry is not None and entry[1] is w.planes \
+                and entry[0] in self.handles:
+            name = entry[0]
+        else:
+            # unseen leaf: lazily place it (registration records the
+            # identity key, so later audits of the same leaf reuse it)
+            name = f"_linear_{id(w.planes)}_{act_bits}"
+            self.register_packed(name, w, QuantSpec(bits=act_bits))
+        out, _report = self.gemv(name, x, backend=_backends.SIM)
+        return out
+
+    # -- compiled decode programs ---------------------------------------------
+
+    def compile(self, handles: Sequence[Union[GemvHandle, str]],
+                groups: Optional[Sequence[Sequence[int]]] = None
+                ) -> GemvProgram:
+        """Fuse a decode step's sequence of resident GeMVs into one
+        interleaved command schedule. The placements already recorded the
+        one-time staging; the simulator's resident rows materialize lazily
+        on the program's first `run` (a jnp/pallas-only serving session
+        never pays the numpy staging memory). `groups` marks independent
+        layers that may share waves — e.g. [[0, 1, 2], [3]] for q/k/v then
+        o — by index into `handles`; default is fully sequential (still
+        zero re-staging)."""
+        hs = tuple(self.handles[h] if isinstance(h, str) else h
+                   for h in handles)
+        if not hs:
+            raise ValueError("compile() needs at least one handle")
+        for h in hs:
+            if not self.pool.is_resident(h.name):
                 raise ValueError(
-                    "the sim audit route executes bit-serial command "
-                    "streams — float-activation linears need act_bits")
-            # cache key carries act_bits: the same leaf served at different
-            # activation precisions gets distinct registrations
-            name = f"_linear_{id(w)}_{act_bits}"
-            if name not in self.handles:
-                self.register_packed(name, w, QuantSpec(bits=act_bits))
-            out, _report = self.gemv(name, x, mode="sim")
-            return out
-        impl = _pallas_impl() if mode == "pallas" else mode
-        if act_bits:
-            return bp_ops.bitplane_gemv_bitserial(
-                x, w, QuantSpec(bits=act_bits), impl=impl)
-        return bp_ops.bitplane_gemv(x, w, impl=impl)
+                    f"{h.name!r} is not resident; register it (or re-place "
+                    f"after eviction) before compiling")
+        grids = [(h.placement.n_chunks, h.placement.col_chunks) for h in hs]
+        placements = [h.placement.banks for h in hs]
+        groups_t = (tuple(tuple(g) for g in groups)
+                    if groups is not None else None)
+        sched = schedule_program(grids, self.geom, groups=groups_t,
+                                 placements=placements)
+        return GemvProgram(self, hs, sched,
+                           groups_t or tuple((i,) for i in range(len(hs))))
+
+    def price_program(self, program: GemvProgram, bit_density: float = 0.5,
+                      batch: int = 1,
+                      usable_cols: Optional[int] = None) -> ProgramCost:
+        """DDR4 price of one fused decode step. Defaults to the SIMULATED
+        column width so `staged_bits` reconciles exactly with the pool's
+        placement accounting and the resident `BatchReport`s (tested);
+        pass `usable_cols=geom.real_cols` for paper-scale pricing — the
+        schedule is then re-fused over the real-width tile grids (schedule
+        and costs must share one column basis) with the SAME concurrency
+        groups, so q/k/v-style groups fill the otherwise idle rank."""
+        cols = usable_cols if usable_cols is not None else \
+            self.geom.subarray_cols
+        costs = []
+        for h in program.handles:
+            p = h.plan
+            costs.append(mvdram_gemv_cost(p.m, p.n, p.q, p.p, bit_density,
+                                          self.sparsity, self.geom,
+                                          usable_cols=cols))
+        if cols == self.geom.subarray_cols:
+            sched = program.sched
+        else:
+            grids = []
+            for h in program.handles:
+                plan = make_plan(h.plan.m, h.plan.n, h.plan.q, h.plan.p,
+                                 self.geom, usable_cols=cols)
+                grids.append((plan.n_chunks, plan.col_chunks))
+            sched = schedule_program(grids, self.geom, groups=program.groups)
+        return price_program(costs, sched, batch=batch,
+                             geom=self.geom, model=self.timing)
 
     # -- pricing (paper-faithful DDR4 numbers) --------------------------------
 
-    def price(self, handle: GemvHandle | str,
+    def price(self, handle: Union[GemvHandle, str],
               bit_density: float = 0.5) -> dict:
         h = self.handles[handle] if isinstance(handle, str) else handle
         p = h.plan
@@ -255,13 +505,21 @@ class MVDRAMEngine:
             "gpu_j": self.gpu.gemv_energy(p.m, p.n, p.q, p.p),
         }
 
-    # -- model-level helper ----------------------------------------------------
+    # -- model-level helpers ---------------------------------------------------
 
-    def storage_bytes(self, handle: GemvHandle | str) -> int:
+    def storage_bytes(self, handle: Union[GemvHandle, str]) -> int:
         """HBM bytes of the packed representation (the capacity win)."""
         h = self.handles[handle] if isinstance(handle, str) else handle
         bw = h.weights
         return int(bw.planes.size * 4 + bw.scale.size * 4 + bw.col_sum.size * 4)
+
+    def residency_stats(self) -> dict:
+        """Pool capacity/eviction stats plus the engine's staged-layer
+        count — the serving layer surfaces this."""
+        stats = self.pool.stats()
+        stats["staged_layers"] = len(self._staged)
+        stats["registered"] = len(self.handles)
+        return stats
 
 
 class EngineLinear:
@@ -270,14 +528,24 @@ class EngineLinear:
     quantized linear of the serving model executes as one engine-batched
     GeMV launch.
 
-    Passed wherever a `dense(..., impl=...)` string goes; call sites that
-    need a plain backend string (e.g. the vmap'd per-expert MoE path) read
-    `.mode` instead. jit-compatible: `engine.linear` is pure in (x, w)."""
+    Passed wherever a `dense(..., impl=...)` goes; call sites that need a
+    plain kernel impl string (e.g. the vmap'd per-expert MoE path) read
+    `.mode` instead. jit-compatible: `engine.linear` is pure in (x, w).
+    Holds a `Backend`; the legacy `mode="jnp"`-style constructor strings
+    resolve through the registry shim."""
 
-    def __init__(self, engine: MVDRAMEngine, mode: str = "jnp"):
+    def __init__(self, engine: MVDRAMEngine,
+                 backend: Union[Backend, str, None] = None,
+                 mode: Optional[str] = None):
         self.engine = engine
-        self.mode = mode
+        self.backend = _backends.resolve(backend, mode)
+
+    @property
+    def mode(self) -> Optional[str]:
+        """Kernel impl string for string-only call sites (MoE vmap)."""
+        return self.backend.kernel_impl
 
     def __call__(self, x: jax.Array, w: BitplaneWeights,
                  act_bits: Optional[int] = None) -> jax.Array:
-        return self.engine.linear(x, w, act_bits=act_bits, mode=self.mode)
+        return self.engine.linear(x, w, act_bits=act_bits,
+                                  backend=self.backend)

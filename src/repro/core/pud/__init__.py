@@ -1,22 +1,31 @@
 """Functional + cost model of Processing-Using-DRAM on unmodified DRAM.
 
-`device.py`   — subarray + wave-parallel BankArray bit-array models with
-                RowCopy / MAJX command streams
-`adder.py`    — dual-track (value+complement) MAJ3/MAJ5 full adders, per-tile
-                and wave-batched ripple-carry
-`layout.py`   — horizontal (MVDRAM) and vertical (conventional PUD) layouts
-`schedule.py` — §VII channel/bank tile placement + wave scheduling
-`gemv.py`     — on-the-fly vector encoding → in-DRAM GeMV execution
-`timing.py`   — DDR4-2400 command timing + energy model, CPU/GPU baselines
+`device.py`    — subarray + wave-parallel BankArray bit-array models with
+                 RowCopy / MAJX command streams
+`adder.py`     — dual-track (value+complement) MAJ3/MAJ5 full adders,
+                 per-tile and wave-batched ripple-carry
+`layout.py`    — horizontal (MVDRAM) and vertical (conventional PUD) layouts
+`schedule.py`  — §VII channel/bank tile placement, wave scheduling, and
+                 cross-layer program schedules (fused decode steps)
+`residency.py` — capacity-aware DramPool placement: matrices get persistent
+                 (channel, bank, row-range) homes; multi-layer co-residency
+`gemv.py`      — on-the-fly vector encoding → in-DRAM GeMV execution,
+                 including staged (resident) execution with zero re-staging
+`timing.py`    — DDR4-2400 command timing + energy model, CPU/GPU baselines,
+                 compiled-program pricing
 """
 from .device import BankArray, Subarray, OpCounts
 from .layout import HorizontalLayout, horizontal_capacity_report
-from .schedule import (BatchSchedule, PudGeometry, TileAssignment,
-                       WaveSchedule, schedule_batch, schedule_tiles)
-from .gemv import (BatchReport, CommandTemplates, TemplatePlan,
-                   build_templates, conventional_pud_cost, mvdram_gemv,
-                   mvdram_gemv_batched, mvdram_gemv_subarray,
-                   select_templates)
+from .schedule import (BatchSchedule, ProgramSchedule, ProgramSlot,
+                       PudGeometry, TileAssignment, WaveSchedule,
+                       schedule_batch, schedule_program, schedule_tiles)
+from .residency import (CapacityError, DramPool, Placement, ResidencyError,
+                        RowSpan, tile_resident_rows)
+from .gemv import (BatchReport, BatchTemplatePlan, CommandTemplates,
+                   StagedWaves, TemplatePlan, build_templates,
+                   conventional_pud_cost, mvdram_gemv, mvdram_gemv_batched,
+                   mvdram_gemv_subarray, select_templates,
+                   select_templates_batched, stage_matrix)
 from .timing import (BatchedPudCost, DDR4Model, CpuBaseline, GpuBaseline,
-                     PudCost, TPU_V5E, DDR4_2400, bank_waves,
-                     price_gemv_batched, simulated_wave_time)
+                     ProgramCost, PudCost, TPU_V5E, DDR4_2400, bank_waves,
+                     price_gemv_batched, price_program, simulated_wave_time)

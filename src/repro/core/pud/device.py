@@ -250,3 +250,16 @@ class BankArray:
     def reset_counts(self) -> None:
         self.shared = OpCounts()
         self.extra = np.zeros_like(self.extra)
+
+    def set_batch(self, batch: int | None) -> None:
+        """Re-arm the command ledger for a new launch over `batch` requests.
+
+        Residency sessions keep a staged `BankArray` (weight rows written
+        once at placement) alive across decode steps; each step starts by
+        resetting the ledger to the step's lane count. The bit STATE is
+        untouched — matrix rows stay resident, accumulator rows are
+        re-cleared by the executor's `clear_accumulator`."""
+        self.batch = batch
+        lead = () if batch is None else (batch,)
+        self.shared = OpCounts()
+        self.extra = np.zeros(lead + (self.tiles, 4), dtype=np.int64)

@@ -30,6 +30,15 @@ class PudGeometry:
     `subarray_cols` is the simulated width (kept small for tractability);
     `real_cols` is the physical bitline count used by the cost model
     (65,536 across the chips of a DDR4 rank, paper §II-B).
+    `subarrays_per_bank` bounds RESIDENCY capacity (`residency.DramPool`):
+    a bank computes in one subarray at a time (§VII), but weight rows of
+    other layers stay parked in its sibling subarrays — a DDR4 bank's 64K
+    rows hold 128 subarrays of 512.
+
+    Frozen AND validated: instances are hashable, so a geometry can key the
+    backend/template caches directly, and every dimension must be a positive
+    int — a zero channel count or negative row budget fails at construction
+    with a clear ValueError instead of corrupting downstream placement math.
     """
 
     subarray_rows: int = 512
@@ -38,10 +47,29 @@ class PudGeometry:
     n_sub_max: int = 128          # paper §VII: N ≤ 128 per subarray
     channels: int = 4             # four DDR4 modules (paper §VII)
     banks_per_channel: int = 16   # concurrently computing subarrays / channel
+    subarrays_per_bank: int = 128  # residency capacity per bank (§II-B)
+
+    def __post_init__(self):
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if not isinstance(v, int) or isinstance(v, bool) or v <= 0:
+                raise ValueError(
+                    f"PudGeometry.{f.name} must be a positive int, got {v!r}")
 
     @property
     def parallel_tiles(self) -> int:
         return self.channels * self.banks_per_channel
+
+    @property
+    def banks(self) -> int:
+        """All (channel, bank) slots of the rank — the residency pool's
+        row-space is partitioned across these."""
+        return self.channels * self.banks_per_channel
+
+    @property
+    def bank_rows(self) -> int:
+        """Rows one bank can park (compute + resident weights)."""
+        return self.subarrays_per_bank * self.subarray_rows
 
 
 @dataclasses.dataclass(frozen=True)
@@ -159,6 +187,142 @@ class BatchSchedule:
     def reuse_factor(self) -> float:
         """Weight-traffic amortization of the co-schedule (== batch)."""
         return self.unshared_weight_loads / self.weight_loads
+
+
+# ---------------------------------------------------------------------------
+# Cross-layer program scheduling (residency sessions: one decode step's
+# sequence of resident GeMVs as a single interleaved command schedule)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ProgramSlot:
+    """One tile of one layer in the fused command stream."""
+
+    layer: int       # index into the program's layer sequence
+    tile: int        # layer-local linear tile index
+    chunk: int
+    col_chunk: int
+    channel: int
+    bank: int
+    wave: int        # GLOBAL wave index, fused across layers
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramSchedule:
+    """Wave slots extended across the layers of one decode step.
+
+    The per-layer §VII placement stays what `schedule_tiles` computes for a
+    solo launch; what fuses is the WAVE axis: layers in the same concurrency
+    `group` (independent GeMVs on the same input — q/k/v, up/gate) pack
+    their tiles into shared waves greedily (one tile per (channel, bank)
+    per wave), and a group boundary — a data dependency — flushes to a
+    fresh wave. `waves` is therefore ≤ the Σ of per-layer solo wave counts;
+    `waves_shared` is the rank-idle waves the fusion reclaimed, which
+    `timing.price_program` turns into compute time (cross-layer command-bus
+    interleaving: one channel's bus streams consecutive layers' command
+    templates back-to-back with no staging traffic in between).
+    """
+
+    geom: PudGeometry
+    layer_tiles: tuple       # (L,) tiles per layer
+    groups: tuple            # concurrency groups: tuples of layer indices
+    slots: tuple             # (Σ tiles,) ProgramSlot, global issue order
+
+    @property
+    def layers(self) -> int:
+        return len(self.layer_tiles)
+
+    @property
+    def tiles(self) -> int:
+        return len(self.slots)
+
+    @property
+    def waves(self) -> int:
+        return (self.slots[-1].wave + 1) if self.slots else 0
+
+    @property
+    def waves_unfused(self) -> int:
+        """Σ of per-layer solo wave counts (no cross-layer sharing)."""
+        return sum(math.ceil(t / self.geom.parallel_tiles)
+                   for t in self.layer_tiles)
+
+    @property
+    def waves_shared(self) -> int:
+        return self.waves_unfused - self.waves
+
+    def wave_members(self, wave: int) -> tuple:
+        return tuple(s for s in self.slots if s.wave == wave)
+
+    def layer_slots(self, layer: int) -> tuple:
+        return tuple(s for s in self.slots if s.layer == layer)
+
+
+def schedule_program(grids, geom: PudGeometry,
+                     groups=None, placements=None) -> ProgramSchedule:
+    """Fuse L layers' tile grids into one interleaved wave schedule.
+
+    grids:      (L,) of (n_chunks, col_chunks).
+    groups:     concurrency groups as iterables of layer indices, in
+                execution order; layers inside a group are independent and
+                may share waves. Default: every layer its own group (purely
+                sequential — still zero re-staging, no wave sharing).
+    placements: optional (L,) of per-tile (channel, bank) sequences (e.g.
+                from `residency.Placement.banks`); defaults to the
+                residency pool's CONTINUING §VII round-robin — the bank
+                cursor rotates across layers, so co-scheduled group
+                members stagger over the rank instead of colliding on
+                bank (0, 0).
+
+    Packing is greedy in slot order: a tile joins the current wave unless
+    its (channel, bank) is already occupied there or the wave is full; a
+    group boundary always opens a fresh wave (data dependency).
+    """
+    grids = [tuple(g) for g in grids]
+    if groups is None:
+        groups = [(l,) for l in range(len(grids))]
+    groups = tuple(tuple(g) for g in groups)
+    seen = [l for g in groups for l in g]
+    if sorted(seen) != list(range(len(grids))):
+        raise ValueError(
+            f"groups must partition the {len(grids)} layers exactly, "
+            f"got {groups}")
+    slots = []
+    wave = 0
+    occupied: set = set()
+
+    def _flush():
+        nonlocal wave, occupied
+        if occupied:
+            wave += 1
+            occupied = set()
+
+    cursor = 0
+    for group in groups:
+        _flush()
+        for layer in group:
+            n_chunks, col_chunks = grids[layer]
+            tiles_l = n_chunks * col_chunks
+            if placements is not None:
+                banks = list(placements[layer])
+            else:
+                banks = [((cursor + t) % geom.channels,
+                          ((cursor + t) // geom.channels)
+                          % geom.banks_per_channel)
+                         for t in range(tiles_l)]
+                cursor = (cursor + tiles_l) % geom.parallel_tiles
+            for t in range(n_chunks * col_chunks):
+                cb = banks[t]
+                if cb in occupied or len(occupied) >= geom.parallel_tiles:
+                    wave += 1
+                    occupied = set()
+                occupied.add(cb)
+                ci, mi = divmod(t, col_chunks)
+                slots.append(ProgramSlot(
+                    layer=layer, tile=t, chunk=ci, col_chunk=mi,
+                    channel=cb[0], bank=cb[1], wave=wave))
+    return ProgramSchedule(geom=geom,
+                           layer_tiles=tuple(g[0] * g[1] for g in grids),
+                           groups=groups, slots=tuple(slots))
 
 
 def schedule_batch(n_chunks: int, col_chunks: int, batch: int,

@@ -29,6 +29,7 @@ import math
 
 from .device import OpCounts
 from .gemv import GemvCost, PudGeometry
+from .schedule import ProgramSchedule
 
 
 # ---------------------------------------------------------------------------
@@ -290,6 +291,128 @@ def price_gemv_batched(cost: GemvCost, batch: int,
         weight_load_bits=cost.weight_load_bits,
         e_pud=e_pud, e_io=e_io, e_host=e_host,
         sequential=price_gemv(cost, geom, model))
+
+
+# ---------------------------------------------------------------------------
+# Residency sessions: pricing one compiled decode program
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ProgramCost:
+    """Priced execution of ONE decode step through a compiled `GemvProgram`.
+
+    Every layer's weights are RESIDENT (placed once by the `DramPool`), so
+    the step pays ZERO weight staging: `t_weight_load == 0` and
+    `weight_load_bits == 0`, with `staged_bits` recording the one-time
+    placement traffic already paid — the simulator's resident `BatchReport`
+    shows the same zero repeated staging (reconciled by test). Compute is
+    priced on the FUSED cross-layer wave schedule: each global wave is bound
+    by its slowest member bank (members may come from different layers),
+    and each channel's command bus streams consecutive layers' templates
+    back-to-back — `waves_shared` counts the rank-idle waves the
+    interleaving reclaimed at concurrency-group boundaries (q/k/v, up/gate).
+
+    `sequential` is the per-layer baseline: each GeMV launched in
+    isolation, re-staging its weight rows every decode step (what the old
+    per-call `register`/`gemv` API paid); `residency_speedup` is the
+    end-to-end step-time ratio the resident program buys.
+    """
+
+    layers: int
+    batch: int
+    t_compute: float       # fused waves, bank/bus bound
+    t_aggregate: float     # per-layer accumulator readouts (serialized)
+    t_encode_extra: float  # encoding not hidden behind compute
+    t_weight_load: float   # 0.0 — weights are resident
+    weight_load_bits: int  # 0 — zero repeated staging
+    staged_bits: int       # one-time placement staging (already paid)
+    waves: int             # fused global wave count
+    waves_shared: int      # waves reclaimed by cross-layer interleaving
+    e_pud: float
+    e_io: float
+    e_host: float
+    sequential: tuple      # (L,) per-layer isolated BatchedPudCost
+
+    @property
+    def t_total(self) -> float:
+        return (self.t_compute + self.t_aggregate + self.t_encode_extra
+                + self.t_weight_load)
+
+    @property
+    def e_total(self) -> float:
+        return self.e_pud + self.e_io + self.e_host
+
+    @property
+    def t_sequential_total(self) -> float:
+        """One decode step as L isolated launches, each re-staging."""
+        return sum(c.t_total for c in self.sequential)
+
+    @property
+    def residency_speedup(self) -> float:
+        return self.t_sequential_total / self.t_total
+
+    def asdict(self):
+        d = dataclasses.asdict(self)
+        d["sequential"] = [c.asdict() for c in self.sequential]
+        d["t_total"] = self.t_total
+        d["t_sequential_total"] = self.t_sequential_total
+        d["residency_speedup"] = self.residency_speedup
+        return d
+
+
+def price_program(costs, sched: ProgramSchedule, batch: int = 1,
+                  geom: PudGeometry = PudGeometry(),
+                  model: DDR4Model = DDR4_2400) -> ProgramCost:
+    """Price one decode step of a compiled program of resident GeMVs.
+
+    costs: (L,) per-layer analytic `GemvCost` (single-pass, e.g.
+    `mvdram_gemv_cost` at matching geometry); sched: the fused cross-layer
+    `ProgramSchedule` from `schedule.schedule_program`.
+
+    Bank-bound compute walks the FUSED waves (max member ops per wave,
+    serialized); bus-bound compute sums each channel's command slots over
+    the whole program (cross-layer interleaving — no staging traffic
+    competes for the bus). Weight staging is zero; the per-layer
+    `sequential` baseline re-prices each layer as an isolated
+    `price_gemv_batched` launch (staging included) for the residency
+    speedup the nightly floor guards.
+    """
+    costs = list(costs)
+    if len(costs) != sched.layers:
+        raise ValueError(
+            f"{len(costs)} layer costs for a {sched.layers}-layer schedule")
+    if batch < 1:
+        raise ValueError(f"batch must be >= 1, got {batch}")
+    ops = [c.ops_per_tile.pud_ops for c in costs]
+    wave_ops: dict[int, int] = {}
+    chan_ops = [0] * geom.channels
+    for s in sched.slots:
+        wave_ops[s.wave] = max(wave_ops.get(s.wave, 0), ops[s.layer])
+        chan_ops[s.channel] += ops[s.layer]
+    t_bank = batch * sum(wave_ops.values()) * model.t_op
+    t_bus = batch * max(chan_ops) * model.t_cmd if sched.slots else 0.0
+    t_compute = max(t_bank, t_bus)
+    t_aggregate = batch * sum(c.aggregate_bits for c in costs) / 8 \
+        / model.agg_bw
+    t_encode = batch * sum(c.encode_host_ops for c in costs) \
+        / model.host_encode_rate
+    t_encode_extra = max(0.0, t_encode - t_compute)
+
+    e_pud = batch * sum(c.runtime.pud_ops for c in costs) * model.e_op
+    e_io = batch * sum(c.runtime.host_bits_read + c.runtime.host_bits_written
+                       for c in costs) * model.e_bit_io
+    e_host = (batch * sum(c.runtime.host_int_ops for c in costs)
+              * model.e_host_op + model.idle_power * t_compute)
+    return ProgramCost(
+        layers=len(costs), batch=batch,
+        t_compute=t_compute, t_aggregate=t_aggregate,
+        t_encode_extra=t_encode_extra,
+        t_weight_load=0.0, weight_load_bits=0,
+        staged_bits=sum(c.weight_load_bits for c in costs),
+        waves=sched.waves, waves_shared=sched.waves_shared,
+        e_pud=e_pud, e_io=e_io, e_host=e_host,
+        sequential=tuple(price_gemv_batched(c, batch, geom, model)
+                         for c in costs))
 
 
 # ---------------------------------------------------------------------------

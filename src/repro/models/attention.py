@@ -157,7 +157,7 @@ def _attend(q, k, v, window, cap, scale):
 # ---------------------------------------------------------------------------
 
 def gqa_forward(x, p, acfg: AttnConfig, window: Optional[int],
-                positions: jax.Array, act_bits=None, impl="jnp",
+                positions: jax.Array, act_bits=None, impl=None,
                 return_kv: bool = False):
     """Full-sequence self-attention. x (B,S,E); positions (S,)."""
     b, s, _ = x.shape
@@ -190,7 +190,7 @@ def _kv_dequant(q, scale):
 
 
 def gqa_decode(x, p, acfg: AttnConfig, window: Optional[int], cache: dict,
-               pos: jax.Array, act_bits=None, impl="jnp",
+               pos: jax.Array, act_bits=None, impl=None,
                attn_impl: str = "sdpa"):
     """One-token step. x (B,1,E); cache {k,v:(B,Sc,Hkv,D), positions:(Sc,)}.
 
@@ -274,7 +274,7 @@ def gqa_cache_init(cfg_batch: int, slots: int, acfg: AttnConfig, dtype,
 # ---------------------------------------------------------------------------
 
 def mla_forward(x, p, acfg: AttnConfig, mla: MLAConfig, positions,
-                act_bits=None, impl="jnp", return_kv: bool = False):
+                act_bits=None, impl=None, return_kv: bool = False):
     """Full-sequence MLA. Params: wq (E, H·(dn+dr)), w_dkv (E, L+dr),
     kv_norm (L,), w_uk (L, H·dn), w_uv (L, H·dv), wo (H·dv, E)."""
     from .layers import rmsnorm
@@ -304,7 +304,7 @@ def mla_forward(x, p, acfg: AttnConfig, mla: MLAConfig, positions,
 
 
 def mla_decode(x, p, acfg: AttnConfig, mla: MLAConfig, cache: dict, pos,
-               act_bits=None, impl="jnp"):
+               act_bits=None, impl=None):
     """Absorbed one-token MLA: cache holds only (c_kv, k_rope)."""
     from .layers import rmsnorm
     b = x.shape[0]

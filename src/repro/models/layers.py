@@ -10,20 +10,23 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..core import backends
 from ..core.bitplane import BitplaneWeights
 from ..core.quant import QuantSpec, QuantizedTensor
 from ..parallel.sharding import constrain
 
 
 def dense(x: jax.Array, w, b: Optional[jax.Array] = None,
-          act_bits: Optional[int] = None, impl="jnp") -> jax.Array:
+          act_bits: Optional[int] = None, impl=None) -> jax.Array:
     """x (..., N) @ w (N, M). `w` may be:
 
       jnp.ndarray        — dense matmul (training / bf16 serving)
       BitplaneWeights    — MVDRAM bit-plane engine (float or bit-serial acts)
       QuantizedTensor    — fused-dequant baseline kernel
 
-    `impl` is a backend string, or a callable `(x, w, act_bits) -> out`
+    `impl` is a `core.backends.Backend` (or None for the default backend,
+    resolved through the registry — no backend-name literals live here), a
+    kernel-registry impl string, or a callable `(x, w, act_bits) -> out`
     (e.g. `core.engine.EngineLinear`) that routes every BitplaneWeights
     linear — the serve batch's lane-batched GeMVs — through the MVDRAM
     engine; non-bitplane leaves fall back to the callable's `.mode` string.
@@ -33,6 +36,7 @@ def dense(x: jax.Array, w, b: Optional[jax.Array] = None,
             out = impl(x, w, act_bits).astype(x.dtype)
         else:
             from ..kernels.bitplane_gemv import ops as bp
+            impl = backends.resolve_impl(impl)
             if act_bits:
                 out = bp.bitplane_gemv_bitserial(
                     x, w, QuantSpec(bits=act_bits), impl=impl)
@@ -41,7 +45,7 @@ def dense(x: jax.Array, w, b: Optional[jax.Array] = None,
             out = out.astype(x.dtype)
     elif isinstance(w, QuantizedTensor):
         from ..kernels.quant_matmul import ops as qm
-        impl = getattr(impl, "mode", impl)
+        impl = backends.resolve_impl(getattr(impl, "mode", impl))
         out = qm.quant_matmul(x, w, impl=impl).astype(x.dtype)
     else:
         out = jnp.einsum("...n,nm->...m", x, w.astype(x.dtype))
@@ -103,7 +107,7 @@ def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
 
 # -- FFN ---------------------------------------------------------------------
 
-def ffn(x: jax.Array, p, ffn_type: str, act_bits=None, impl="jnp"):
+def ffn(x: jax.Array, p, ffn_type: str, act_bits=None, impl=None):
     """GLU (SwiGLU/GeGLU) or classic 2-layer MLP."""
     if ffn_type == "glu":
         up = dense(x, p["up"], act_bits=act_bits, impl=impl)
@@ -127,7 +131,7 @@ def embed(tokens: jax.Array, table: jax.Array, scale: bool,
 
 
 def lm_head(x: jax.Array, w, cap: Optional[float],
-            act_bits=None, impl="jnp") -> jax.Array:
+            act_bits=None, impl=None) -> jax.Array:
     logits = dense(x, w, act_bits=act_bits, impl=impl).astype(jnp.float32)
     logits = softcap(logits, cap)
     return constrain(logits, "batch", "seq", "vocab")

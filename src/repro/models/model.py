@@ -222,7 +222,7 @@ def param_pspecs(cfg: ModelConfig, mesh=None, rules=None):
 # ---------------------------------------------------------------------------
 
 def _apply_stage(x, p, kind: str, cfg: ModelConfig, positions,
-                 act_bits=None, impl="jnp"):
+                 act_bits=None, impl=None):
     """One stage, full sequence. Returns (x, aux_loss)."""
     aux = jnp.zeros((), jnp.float32)
     if kind == "mamba":
@@ -265,7 +265,7 @@ class Model:
     """Functional wrapper bound to a ModelConfig."""
 
     def __init__(self, cfg: ModelConfig, act_bits: Optional[int] = None,
-                 impl: str = "jnp", remat: bool = False,
+                 impl=None, remat: bool = False,
                  kv_bits: Optional[int] = None, attn_impl: str = "sdpa"):
         self.cfg = cfg
         self.act_bits = act_bits

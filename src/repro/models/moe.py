@@ -26,16 +26,17 @@ from .layers import dense
 GROUP_SIZE = 256   # tokens per dispatch group (GShard "group" dim)
 
 
-def _expert_mm(xe, w, impl="jnp"):
+def _expert_mm(xe, w, impl=None):
     """Per-expert matmul (G,E,C,din) × w → (G,E,C,dout).
 
     `w` is a dense (E, din, dout) array — or an E-stacked BitplaneWeights,
     in which case each expert's tile goes through the MVDRAM bit-plane
     engine (the per-expert GeMV batch the paper's low-bit path serves).
     A callable `impl` (the serve engine's `EngineLinear` router) degrades
-    to its backend string here — the vmap'd expert stack is not a single
-    2-D registered GeMV."""
-    impl = getattr(impl, "mode", impl)
+    to its backend's kernel impl here — the vmap'd expert stack is not a
+    single 2-D registered GeMV."""
+    from ..core import backends
+    impl = backends.resolve_impl(getattr(impl, "mode", impl))
     from ..core.bitplane import BitplaneWeights
     if isinstance(w, BitplaneWeights):
         from ..kernels.bitplane_gemv import ops as bp
@@ -70,7 +71,7 @@ def router(x, w_router, cfg: MoEConfig):
 
 
 def moe_ffn(x, p, cfg: MoEConfig, ffn_type: str = "glu",
-            act_bits=None, impl="jnp", group_size: int = GROUP_SIZE):
+            act_bits=None, impl=None, group_size: int = GROUP_SIZE):
     """x (B, S, E) → (B, S, E), aux loss.
 
     GShard-style grouped capacity dispatch: tokens are partitioned into
@@ -125,7 +126,7 @@ def moe_ffn(x, p, cfg: MoEConfig, ffn_type: str = "glu",
 
 
 def moe_decode(x, p, cfg: MoEConfig, ffn_type: str = "glu",
-               act_bits=None, impl="jnp"):
+               act_bits=None, impl=None):
     """Decode-time MoE: tiny token count — dense-gather per top-k expert.
 
     With T = batch tokens (no capacity dropping at decode), compute the k

@@ -132,7 +132,7 @@ def ssd_step(x_t, b_t, c_t, dt_t, a_log, d_skip, state):
 # Full Mamba2 block
 # ---------------------------------------------------------------------------
 
-def mamba_forward(x, p, cfg: ModelConfig, act_bits=None, impl="jnp"):
+def mamba_forward(x, p, cfg: ModelConfig, act_bits=None, impl=None):
     """Full-sequence Mamba2 block. x (B,S,E) → (B,S,E), decode cache
     ({"conv": raw tail window, "ssm": final state})."""
     s = cfg.ssm
@@ -161,7 +161,7 @@ def mamba_forward(x, p, cfg: ModelConfig, act_bits=None, impl="jnp"):
     return out, {"conv": tail, "ssm": state}
 
 
-def mamba_decode(x, p, cfg: ModelConfig, cache, act_bits=None, impl="jnp"):
+def mamba_decode(x, p, cfg: ModelConfig, cache, act_bits=None, impl=None):
     """One-token Mamba2 step. cache = {"conv": (B,K-1,C), "ssm": (B,H,P,N)}."""
     s = cfg.ssm
     bsz = x.shape[0]

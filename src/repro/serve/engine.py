@@ -15,11 +15,18 @@ per-token Python loop is retained behind `scan=False` as the
 token-for-token oracle (tested identical at temperature 0 and for the
 seeded sampling path — the scan folds the same per-step PRNG keys).
 
-Quantized serving routes every lane-batched bit-plane linear through an
-`MVDRAMEngine` (`core.engine.EngineLinear` installed as the model's
-`impl`): the (lanes, N) decode activations execute as ONE batched GeMV
-launch per weight — the software analogue of the simulator's cross-request
-wave sharing, where the resident weight rows serve the whole lane batch.
+Quantized serving is a RESIDENCY SESSION: at startup every 2-D quantized
+weight leaf of the model is registered into ONE `DramPool` (each matrix
+gets a persistent (channel, bank, row-range) home; heterogeneous shapes
+co-reside), and the block's GeMV sequence is compiled into a
+`GemvProgram` whose fused wave schedule re-stages nothing across decode
+steps. Decode-time linears route through `core.engine.EngineLinear`
+(installed as the model's `impl`): the (lanes, N) decode activations
+execute as ONE batched GeMV launch per weight — the software analogue of
+the simulator's cross-request wave sharing — while `decode_program` /
+`price_decode_step()` expose the resident-decode accounting (zero
+repeated weight staging) and the sim-audit path executes against the same
+staged rows.
 """
 from __future__ import annotations
 
@@ -30,11 +37,21 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..core.engine import EngineLinear, MVDRAMEngine
+from ..core import backends
+from ..core.bitplane import BitplaneWeights
+from ..core.engine import EngineLinear, GemvProgram, MVDRAMEngine
+from ..core.pud.residency import CapacityError
+from ..core.quant import QuantSpec
 from ..models.config import ModelConfig
 from ..models.model import Model
 from ..parallel.sharding import axis_rules, logical_to_pspec
 from .quantize import quantize_params
+
+# Independent linears of one block — they read the SAME input, so their
+# tiles may share waves in the compiled decode program (q/k/v on the
+# attention input, up/gate on the FFN input).
+_CONCURRENT_LEAVES = (("wq", "wk", "wv"), ("up", "gate"),
+                      ("shared_up", "shared_gate"))
 
 
 def make_serve_step(model: Model):
@@ -81,19 +98,27 @@ class ServeEngine:
 
     def __init__(self, cfg: ModelConfig, params, max_seq: int = 512,
                  batch_slots: int = 4, quantized: bool = False,
-                 act_bits: Optional[int] = None, impl: str = "jnp",
+                 act_bits: Optional[int] = None, impl=None,
                  mesh=None, rules=None):
         self.cfg = cfg
         self.mesh, self.rules = mesh, rules
         self.max_seq = max_seq
         self.slots = batch_slots
         self.mvdram: Optional[MVDRAMEngine] = None
+        self.decode_program: Optional[GemvProgram] = None
         model_impl = impl
         if quantized:
             params = quantize_params(params, cfg.weight_bits)
-            # every lane-batched quantized linear routes through the engine
-            self.mvdram = MVDRAMEngine()
-            model_impl = EngineLinear(self.mvdram, mode=impl)
+            # residency session: the whole model co-resides in one pool,
+            # and every lane-batched quantized linear routes through the
+            # engine against those resident weights. on_full="raise" so a
+            # model that outgrows the pool fails placement VISIBLY (and
+            # falls back to program-less serving) instead of silently
+            # LRU-evicting the layers just placed
+            self.mvdram = MVDRAMEngine(on_full="raise")
+            self.decode_program = self._place_model(params, act_bits)
+            model_impl = EngineLinear(self.mvdram,
+                                      backend=backends.get_backend(impl))
         self.params = params
         self.model = Model(cfg, act_bits=act_bits if quantized else None,
                            impl=model_impl)
@@ -101,6 +126,95 @@ class ServeEngine:
                                         max_seq=max_seq))
         self._step = jax.jit(make_serve_step(self.model))
         self._decode_fns: dict = {}
+
+    def _place_model(self, qparams, act_bits: Optional[int]
+                     ) -> Optional[GemvProgram]:
+        """Register every quantized weight leaf into the engine's pool
+        (phase ① — the whole model becomes co-resident, heterogeneous
+        shapes included) and compile the decode step's GeMV sequence into
+        one fused program. Layer-stacked leaves (the scan-stacked stages)
+        unstack into one resident matrix per layer; per-expert MoE stacks
+        (w_up/w_gate/w_down) serve through the vmap'd expert path and stay
+        un-pooled."""
+        a_spec = QuantSpec(bits=act_bits) if act_bits else None
+        leaves: list = []   # (stage_path, stack_idx, leaf_name, BitplaneWeights)
+
+        def walk(tree, path=()):
+            if isinstance(tree, dict):
+                for k in tree:
+                    walk(tree[k], path + (str(k),))
+                return
+            if not isinstance(tree, BitplaneWeights):
+                return
+            leaf = path[-1]
+            if leaf in ("w_up", "w_gate", "w_down"):   # per-expert stacks
+                return
+            stage = "/".join(path[:-1])
+            if tree.planes.ndim == 3:
+                leaves.append((stage, -1, leaf, tree))
+            elif tree.planes.ndim == 4:                # layer-stacked stage
+                for i in range(tree.planes.shape[0]):
+                    leaves.append((stage, i, leaf, BitplaneWeights(
+                        planes=tree.planes[i], scale=tree.scale[i],
+                        zero=tree.zero, col_sum=tree.col_sum[i],
+                        n=tree.n, spec=tree.spec)))
+
+        walk(qparams)
+        if not leaves:
+            return None
+        # decode order: layer-major (stage, stack index), leaves within
+        leaves.sort(key=lambda e: (e[0], e[1]))
+        names = []
+        try:
+            for stage, idx, leaf, bw in leaves:
+                name = f"{stage}/{leaf}" + (f"#{idx}" if idx >= 0 else "")
+                self.mvdram.register_packed(name, bw, a_spec=a_spec)
+                names.append(name)
+        except CapacityError as e:
+            # the model does not fit the pool: roll the partial residency
+            # back (silent LRU churn would evict the layers we just
+            # placed and make compile fail anyway) and serve through the
+            # jit path without a resident decode program
+            import warnings
+            for name in names:
+                if self.mvdram.pool.is_resident(name):
+                    self.mvdram.evict(name)
+            warnings.warn(
+                f"model does not fit the DramPool "
+                f"({len(names)}/{len(leaves)} linears placed before "
+                f"capacity ran out); serving without a resident decode "
+                f"program. {e}", RuntimeWarning, stacklevel=2)
+            return None
+        # concurrency groups: leaves of one (stage, layer) that read the
+        # same input (q/k/v, up/gate) may share waves; the rest serializes
+        groups, used = [], set()
+        index = {(e[0], e[1], e[2]): i for i, e in enumerate(leaves)}
+        for i, (stage, idx, leaf, _bw) in enumerate(leaves):
+            if i in used:
+                continue
+            group = [i]
+            for peers in _CONCURRENT_LEAVES:
+                if leaf in peers:
+                    group = [index[(stage, idx, p)] for p in peers
+                             if (stage, idx, p) in index]
+            used.update(group)
+            groups.append(group)
+        return self.mvdram.compile(names, groups=groups)
+
+    def price_decode_step(self, bit_density: float = 0.5,
+                          batch: Optional[int] = None) -> Optional[dict]:
+        """DDR4 price of one resident decode step through the compiled
+        program (zero repeated weight staging), next to the per-layer
+        re-staging baseline. None for unquantized engines."""
+        if self.decode_program is None:
+            return None
+        cost = self.decode_program.price(bit_density=bit_density,
+                                         batch=batch or self.slots)
+        return cost.asdict()
+
+    def residency_stats(self) -> Optional[dict]:
+        return (self.mvdram.residency_stats()
+                if self.mvdram is not None else None)
 
     def _decode_scan_fn(self, trip: int):
         """ONE masked jitted scan over `trip` decode slots (a power-of-two

@@ -1,0 +1,174 @@
+"""Bench-regression gate + row-manifest checker for `sim_bench` JSON.
+
+Two modes, composable in one invocation:
+
+  regression gate (pull_request CI):
+      python -m benchmarks.check_regression BENCH_new1.json BENCH_new2.json \
+          --baseline BENCH_sim.json --max-drop 0.25
+    Every speedup/amortization row (name ending in `_speedup_x` or
+    `_amortization_x`) present in the BASELINE must exist in the new run
+    and may not drop more than `--max-drop` below the committed value —
+    a PR that slows a measured ratio by >25% fails before merge. Rows the
+    new run ADDS are fine (they enter the baseline when it is re-committed).
+    Several run files gate on the per-row BEST: shared runners see
+    multi-second memory-bandwidth contention that slows only the
+    bandwidth-bound side of a ratio, so one slow window must not fail a
+    healthy PR — a real regression is slow in EVERY independent run.
+
+  row manifest (nightly CI):
+      python -m benchmarks.check_regression BENCH_sim.json \
+          --require-rows benchmarks/bench_rows.txt
+    Every row named in the manifest (one per line, `#` comments) must be
+    present with a finite positive value, and the run must have recorded
+    zero `.ERROR` entries. This replaces per-row `grep` lines in the
+    workflow: a new bench row is guarded by ADDING ONE MANIFEST LINE, and
+    a row that silently disappears (renamed, crashed, filtered) fails the
+    job instead of going unchecked.
+
+Exit status 0 = all checks pass; 1 = any failure (each printed).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import sys
+
+GATED_SUFFIXES = ("_speedup_x", "_amortization_x")
+
+
+def load_doc(path: str) -> dict:
+    with open(path) as f:
+        doc = json.load(f)
+    if "rows" not in doc:
+        raise ValueError(f"{path} is not a sim_bench JSON (no 'rows' key)")
+    return doc
+
+
+def rows_by_name(doc: dict) -> dict:
+    return {r["name"]: r["value"] for r in doc["rows"]}
+
+
+def merge_best(docs) -> dict:
+    """Merge several runs' rows into one name→value map keeping the MAX
+    per row — gated rows are speedup ratios, so the best of N independent
+    runs is the least contention-polluted measurement of each."""
+    merged: dict = {}
+    for doc in docs:
+        for name, value in rows_by_name(doc).items():
+            if not isinstance(value, (int, float)) \
+                    or not math.isfinite(value):
+                continue
+            if name not in merged or value > merged[name]:
+                merged[name] = value
+    return merged
+
+
+def check_errors(doc: dict, label: str) -> list:
+    """The bench harness records per-benchmark failures instead of dying;
+    a gated run must have recorded none."""
+    return [f"{label}: benchmark {e['bench']!r} errored: {e['error']}"
+            for e in doc.get("errors", [])]
+
+
+def check_drop(new_rows: dict, base_doc: dict, max_drop: float) -> list:
+    """Gated ratio rows of the baseline must survive in the new run
+    (`new_rows`: name→value, e.g. `merge_best` of the run files) within
+    (1 - max_drop)× the committed value."""
+    failures = []
+    for name, base in sorted(rows_by_name(base_doc).items()):
+        if not name.endswith(GATED_SUFFIXES):
+            continue
+        if not isinstance(base, (int, float)) or not math.isfinite(base):
+            continue
+        if name not in new_rows:
+            failures.append(
+                f"gated row {name!r} (baseline {base:.4g}) is missing from "
+                f"the new run")
+            continue
+        new = new_rows[name]
+        floor = base * (1.0 - max_drop)
+        if not isinstance(new, (int, float)) or not math.isfinite(new):
+            failures.append(f"gated row {name!r} is not finite: {new!r}")
+        elif new < floor:
+            failures.append(
+                f"{name}: {new:.4g} dropped >{max_drop:.0%} below the "
+                f"baseline {base:.4g} (floor {floor:.4g})")
+    return failures
+
+
+def read_manifest(path: str) -> list:
+    names = []
+    with open(path) as f:
+        for line in f:
+            line = line.split("#", 1)[0].strip()
+            if line:
+                names.append(line)
+    return names
+
+
+def check_required(rows: dict, required) -> list:
+    """Every manifest row must exist with a finite positive value."""
+    failures = []
+    for name in required:
+        if name not in rows:
+            failures.append(f"required row {name!r} missing from the run")
+            continue
+        v = rows[name]
+        if not isinstance(v, (int, float)) or isinstance(v, bool) \
+                or not math.isfinite(v) or v <= 0:
+            failures.append(
+                f"required row {name!r} has a non-positive/non-finite "
+                f"value: {v!r}")
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("new_json", nargs="+",
+                    help="sim_bench --json output(s) to check; several "
+                         "independent runs gate on the per-row best")
+    ap.add_argument("--baseline", default=None, metavar="PATH",
+                    help="committed baseline JSON for the >max-drop gate")
+    ap.add_argument("--max-drop", type=float, default=0.25,
+                    help="max allowed fractional drop of a gated ratio row "
+                         "below the baseline (default 0.25)")
+    ap.add_argument("--require-rows", default=None, metavar="MANIFEST",
+                    help="row-name manifest every run must produce")
+    args = ap.parse_args(argv)
+    if args.baseline is None and args.require_rows is None:
+        ap.error("nothing to check: pass --baseline and/or --require-rows")
+    if not 0.0 < args.max_drop < 1.0:
+        ap.error(f"--max-drop must be in (0, 1), got {args.max_drop}")
+
+    new_docs = [load_doc(p) for p in args.new_json]
+    failures = []
+    for path, doc in zip(args.new_json, new_docs):
+        failures += check_errors(doc, path)
+    new_rows = merge_best(new_docs)
+    checked = []
+    if args.baseline is not None:
+        base_doc = load_doc(args.baseline)
+        failures += check_drop(new_rows, base_doc, args.max_drop)
+        gated = [n for n in rows_by_name(base_doc)
+                 if n.endswith(GATED_SUFFIXES)]
+        checked.append(f"{len(gated)} gated ratio rows vs {args.baseline} "
+                       f"(max drop {args.max_drop:.0%})")
+    if args.require_rows is not None:
+        required = read_manifest(args.require_rows)
+        failures += check_required(new_rows, required)
+        checked.append(f"{len(required)} manifest rows from "
+                       f"{args.require_rows}")
+
+    print(f"check_regression: {', '.join(args.new_json)}: "
+          + "; ".join(checked))
+    if failures:
+        for f in failures:
+            print(f"FAIL: {f}")
+        return 1
+    print("OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,14 +15,26 @@ RESIDENT decode: a 4-layer block compiled into one `GemvProgram` (weights
 staged once by the residency pool, q/k/v waves fused) vs per-layer
 sequential staging — asserting the ≥1.5× wall-clock floor, bit-identical
 outputs/per-tile runtime OpCounts, ZERO repeated weight staging, and exact
-staging reconciliation against the pool placements; and (5) the MXU dots
-issued per tile by the bit-serial Pallas kernel's decomposed schedule vs
-the §V-D code-dot fast path (q·p vs q), plus measured interpret-mode
+staging reconciliation against the pool placements; (5) FUSED wave-major
+program execution (the simulator walks `schedule_program`'s fused slot
+order directly, one batched step per global wave) vs the retained
+layer-major oracle on the same 4-layer q4/p2 B=2 block — asserting the
+≥1.3× floor, bit-identical outputs AND per-tile OpCounts, executed fused
+waves == the compiled schedule's, and `price_program(executed=…)`
+reconciling against the measured per-wave serialization; and (6) the MXU
+dots issued per tile by the bit-serial Pallas kernel's decomposed schedule
+vs the §V-D code-dot fast path (q·p vs q), plus measured interpret-mode
 wall-clock for both fidelities.
 
     PYTHONPATH=src python -m benchmarks.sim_bench --json
         runs everything and writes BENCH_sim.json (per-shape wall-clock +
         speedup ratios) so the perf trajectory is tracked across PRs.
+    PYTHONPATH=src python -m benchmarks.sim_bench --json BENCH_new.json --smoke
+        the pull-request gate: the (slow) Pallas-interpret kernel section
+        is skipped. Benchmark SHAPES and the best-of-5 measurement are
+        unchanged so every speedup/amortization row stays directly
+        comparable to the committed full-run BENCH_sim.json baseline
+        (`benchmarks/check_regression.py --max-drop`).
 """
 from __future__ import annotations
 
@@ -34,21 +46,45 @@ import numpy as np
 from repro.core.bitplane import make_bitplane_weights
 from repro.core.engine import MVDRAMEngine
 from repro.core.pud.gemv import PudGeometry, mvdram_gemv, mvdram_gemv_cost
-from repro.core.pud.timing import price_gemv_batched
+from repro.core.pud.timing import price_gemv_batched, simulated_wave_time
 from repro.core.quant import (QuantSpec, quantize_activations,
                               quantize_weights)
-from repro.kernels.bitplane_gemv import ops as bp
-from repro.kernels.bitplane_gemv.kernel import dots_per_tile
 
 N, M, Q, P = 512, 256, 4, 4
 # Banked geometry for the wave benchmark: 16 reduction chunks × 16 column
 # chunks = 256 tiles over 64 concurrent subarrays → 4 waves.
 BANKED = PudGeometry(subarray_cols=64, n_sub_max=32)
 
+# measurement repetitions (best-of-N). The fast denominators (wave/fused
+# paths, ~5-10 ms) are the noisy side of every ratio; best-of-5 converges
+# them to the true min closely enough for the PR gate's 25% drop threshold
+# (single-rep and best-of-3 measurements were observed to swing >25% under
+# runner load). --smoke keeps N=5 so smoke rows compare like-for-like
+# against the committed full-run baseline.
+_REPS = 5
 
-def _best_of(fn, reps: int = 3):
+
+# Measured-timing floors are hard asserts on full runs. Under --smoke they
+# are tolerated (printed, not fatal): the PR gate takes the per-row BEST
+# of two independent smoke runs precisely because one run can hit a
+# transient contention window — an in-run fatal assert would abort before
+# the second run could absorb it. Correctness asserts (bit-identity,
+# reconciliation) are ALWAYS fatal; only wall-clock floors soften.
+_FLOORS_FATAL = True
+
+
+def _assert_floor(value: float, floor: float, msg: str) -> None:
+    if value >= floor:
+        return
+    if _FLOORS_FATAL:
+        raise AssertionError(msg)
+    print(f"# smoke: tolerated measured-floor miss ({msg}); "
+          f"the cross-run regression gate decides")
+
+
+def _best_of(fn, reps: int | None = None):
     best, ret = float("inf"), None
-    for _ in range(reps):
+    for _ in range(reps if reps is not None else _REPS):
         t0 = time.perf_counter()
         out = fn()
         dt = time.perf_counter() - t0
@@ -79,7 +115,8 @@ def sim_vectorized_vs_naive(emit):
     emit("sim.vectorized_speedup_x", speedup,
          f"bit_identical={bit_identical} pud_ops={rep_v.runtime.pud_ops}")
     assert bit_identical, "vectorized sim diverged from the naive oracle"
-    assert speedup >= 20.0, f"speedup {speedup:.1f}x below the 20x floor"
+    _assert_floor(speedup, 20.0,
+                  f"speedup {speedup:.1f}x below the 20x floor")
 
 
 def sim_wave_vs_sequential(emit):
@@ -110,7 +147,8 @@ def sim_wave_vs_sequential(emit):
          f"waves={rep_w.waves}")
     assert bit_identical, "wave sim diverged from the sequential oracle"
     assert rep_w.waves == 4, f"expected 4 waves, got {rep_w.waves}"
-    assert speedup >= 5.0, f"speedup {speedup:.1f}x below the 5x floor"
+    _assert_floor(speedup, 5.0,
+                  f"speedup {speedup:.1f}x below the 5x floor")
 
 
 def sim_batched_wave_sharing(emit):
@@ -168,8 +206,26 @@ def sim_batched_wave_sharing(emit):
     assert runtime_match, "batch runtime != sum of per-request runtimes"
     assert rep.waves == 4, f"expected 4 waves, got {rep.waves}"
     assert rep.schedule.reuse_factor == B
-    assert amortization >= 2.0, \
-        f"amortization {amortization:.2f}x below the 2x floor"
+    _assert_floor(amortization, 2.0,
+                  f"amortization {amortization:.2f}x below the 2x floor")
+
+
+def _resident_block(seed: int = 5, B: int = 2, q_b: int = 4, p_b: int = 2):
+    """The 4-layer q4/p2 B=2 resident block (q/k/v-style group of three
+    512→256 linears + a 256→512 down projection) shared by the resident
+    and fused-execution benchmarks."""
+    rng = np.random.default_rng(seed)
+    eng = MVDRAMEngine(geom=BANKED)
+    shapes = [(N, M), (N, M), (N, M), (M, N)]
+    hs = []
+    for i, (n, m) in enumerate(shapes):
+        w = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+        hs.append(eng.register(f"layer{i}", w, QuantSpec(bits=q_b),
+                               a_spec=QuantSpec(bits=p_b)))
+    prog = eng.compile(hs, groups=[[0, 1, 2], [3]])
+    X = [jnp.asarray(rng.normal(size=(B, n)), jnp.float32)
+         for (n, _m) in shapes]
+    return eng, hs, prog, X
 
 
 def sim_resident_decode(emit):
@@ -183,18 +239,8 @@ def sim_resident_decode(emit):
     the per-call oracle's preload); measured wall-clock amortization and
     the priced residency speedup (real-DRAM columns, fused q/k/v waves)
     must clear the ≥1.5× floor."""
-    B, q_b, p_b = 2, 4, 2
-    rng = np.random.default_rng(5)
-    eng = MVDRAMEngine(geom=BANKED)
-    shapes = [(N, M), (N, M), (N, M), (M, N)]
-    hs = []
-    for i, (n, m) in enumerate(shapes):
-        w = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
-        hs.append(eng.register(f"layer{i}", w, QuantSpec(bits=q_b),
-                               a_spec=QuantSpec(bits=p_b)))
-    prog = eng.compile(hs, groups=[[0, 1, 2], [3]])
-    X = [jnp.asarray(rng.normal(size=(B, n)), jnp.float32)
-         for (n, _m) in shapes]
+    B, p_b = 2, 2
+    eng, hs, prog, X = _resident_block(B=B, p_b=p_b)
     aqs = [quantize_activations(x, QuantSpec(bits=p_b)) for x in X]
 
     def run_seq():
@@ -236,13 +282,68 @@ def sim_resident_decode(emit):
     assert zero_restaging, "resident decode step re-staged weight rows"
     assert staging_match, "placement staging != oracle preload accounting"
     assert priced.weight_load_bits == 0
-    assert amortization >= 1.5, \
-        f"amortization {amortization:.2f}x below the 1.5x floor"
+    _assert_floor(amortization, 1.5,
+                  f"amortization {amortization:.2f}x below the 1.5x floor")
     assert priced.residency_speedup >= 1.5, \
         f"priced speedup {priced.residency_speedup:.2f}x below the 1.5x floor"
 
 
+def sim_fused_program(emit):
+    """Fused cross-layer wave execution (ISSUE 5): the same 4-layer q4/p2
+    B=2 resident block, decoded by walking the compiled `ProgramSchedule`'s
+    fused slot order directly — one batched simulator step per global wave,
+    heterogeneous layouts sharing boundary waves — vs the retained
+    layer-major oracle. Outputs and per-tile OpCounts must be bit-identical,
+    execution must run exactly the waves the schedule fused (reconciled into
+    `price_program(executed=…)`), and the measured wall-clock speedup must
+    clear the ≥1.3× floor."""
+    B = 2
+    eng, hs, prog, X = _resident_block(B=B)
+
+    prog.run(X)                      # warm: staging + fused plan built
+    prog.run(X, layer_major=True)
+    t_fused, (outs_f, rep_f) = _best_of(lambda: prog.run(X))
+    t_layer, (outs_l, rep_l) = _best_of(
+        lambda: prog.run(X, layer_major=True))
+
+    # bit-exactness vs the layer-major oracle: outputs AND per-(request,
+    # tile) runtime OpCounts (report materialization is lazy — outside the
+    # timed region for the fused path, as in a real decode loop)
+    bit_identical = all(
+        np.array_equal(np.asarray(of), np.asarray(ol))
+        and [c.asdict() for c in rf.requests[b].tile_runtime]
+            == [c.asdict() for c in rl.requests[b].tile_runtime]
+        and rf.runtime.asdict() == rl.runtime.asdict()
+        for of, rf, ol, rl in zip(outs_f, rep_f.reports, outs_l,
+                                  rep_l.reports)
+        for b in range(B))
+    executed_match = rep_f.fused and rep_f.waves == prog.sched.waves
+    # the program price's bank term now reconciles against the EXECUTED
+    # fused-wave serialization, not the scheduled estimate
+    priced = eng.price_program(prog, batch=B, executed=rep_f)
+    t_sim = simulated_wave_time(rep_f)
+    price_reconciles = priced.t_compute >= t_sim > 0.0
+
+    speedup = t_layer / t_fused
+    emit("sim.layer_major_4layer_q4p2_b2_ms", t_layer * 1e3)
+    emit("sim.fused_wave_4layer_q4p2_b2_ms", t_fused * 1e3)
+    emit("sim.fused_wave_speedup_x", speedup,
+         f"bit_identical={bit_identical} waves={rep_f.waves} "
+         f"scheduled={prog.sched.waves} shared={prog.sched.waves_shared} "
+         f"t_sim_us={t_sim * 1e6:.1f}")
+    assert bit_identical, "fused execution diverged from layer-major oracle"
+    assert executed_match, (
+        f"executed {rep_f.waves} fused waves, schedule has "
+        f"{prog.sched.waves}")
+    assert price_reconciles, "executed-wave pricing failed to reconcile"
+    _assert_floor(speedup, 1.3,
+                  f"fused speedup {speedup:.2f}x below the 1.3x floor")
+
+
 def kernel_dots_issued(emit):
+    from repro.kernels.bitplane_gemv import ops as bp
+    from repro.kernels.bitplane_gemv.kernel import dots_per_tile
+
     rng = np.random.default_rng(1)
     w = jnp.asarray(rng.normal(size=(N, M)), jnp.float32)
     a = jnp.asarray(rng.normal(size=(4, N)), jnp.float32)
@@ -271,7 +372,12 @@ def kernel_dots_issued(emit):
 
 
 ALL = [sim_vectorized_vs_naive, sim_wave_vs_sequential,
-       sim_batched_wave_sharing, sim_resident_decode, kernel_dots_issued]
+       sim_batched_wave_sharing, sim_resident_decode, sim_fused_program,
+       kernel_dots_issued]
+
+# skipped under --smoke: Pallas interpret-mode timing is the long pole and
+# emits no gated ratio rows
+_SLOW = {kernel_dots_issued}
 
 
 # ---------------------------------------------------------------------------
@@ -290,7 +396,17 @@ def main() -> None:
                          "(default path: BENCH_sim.json)")
     ap.add_argument("--only", default=None,
                     help="substring filter on benchmark function names")
+    ap.add_argument("--smoke", action="store_true",
+                    help="pull-request gate config: the slow Pallas-"
+                         "interpret kernel section is skipped; simulator "
+                         "shapes and best-of-5 measurement are unchanged "
+                         "so every speedup row stays directly comparable "
+                         "to the committed full-run baseline")
     args = ap.parse_args()
+
+    if args.smoke:
+        global _FLOORS_FATAL
+        _FLOORS_FATAL = False
 
     rows: list = []
 
@@ -302,6 +418,8 @@ def main() -> None:
     errors = []
     for fn in ALL:
         if args.only and args.only not in fn.__name__:
+            continue
+        if args.smoke and fn in _SLOW:
             continue
         try:
             fn(emit)

@@ -11,6 +11,9 @@ whole pipeline (§IV, §VI). This example walks the new two-phase API:
              (q/k/v share waves; weight rows staged exactly once)
   ③ decode   run decode steps against the resident rows — zero weight
              re-staging, outputs bit-identical to per-layer `gemv`
+  ④ fused    the default `run` EXECUTES the fused schedule wave-major
+             (one batched simulator step per global wave, boundary waves
+             spanning layers); `layer_major=True` is the retained oracle
 
     PYTHONPATH=src python examples/resident_decode.py
 """
@@ -74,10 +77,39 @@ print(f"same launch: resident stages "
       f"re-stages {rep_fresh.shared_preload.host_bits_written} bits "
       f"(outputs bit-identical)")
 
-# priced: one fused resident step vs per-layer re-staging at real DRAM width
+# -- ④ fused wave-major execution vs the layer-major oracle ------------------
+# the default `run` above already executed the FUSED schedule: one batched
+# simulator step per global wave, q/k/v (and up/gate) tiles sharing
+# boundary waves across layers. The retained layer-major path is the
+# bit-exactness oracle — outputs and per-tile OpCounts identical, only the
+# wave axis (and wall-clock) differs.
+import time
+
+acts = [jnp.asarray(rng.normal(size=(B, n)), jnp.float32)
+        for (n, _m) in layers.values()]
+program.run(acts)                          # warm both paths
+program.run(acts, layer_major=True)
+t0 = time.perf_counter(); outs_f, rep_f = program.run(acts)
+t_fused = time.perf_counter() - t0
+t0 = time.perf_counter(); outs_l, rep_l = program.run(acts, layer_major=True)
+t_layer = time.perf_counter() - t0
+assert all(np.array_equal(np.asarray(a), np.asarray(b))
+           for a, b in zip(outs_f, outs_l))
+print(f"fused wave-major: {rep_f.waves} executed waves "
+      f"(schedule fused {program.sched.waves_shared} away vs "
+      f"{program.sched.waves_unfused} layer-major), "
+      f"{t_fused * 1e3:.2f} ms vs {t_layer * 1e3:.2f} ms layer-major "
+      f"({t_layer / t_fused:.2f}x; nightly bench row "
+      f"sim.fused_wave_speedup_x holds this at >=1.3x)")
+
+# priced: one fused resident step vs per-layer re-staging at real DRAM
+# width, plus the SIMULATED-width price reconciled against the waves the
+# fused run actually executed (measurement, not model)
 cost = engine.price_program(program, batch=B,
                             usable_cols=geom.real_cols)
+measured = engine.price_program(program, batch=B, executed=rep_f)
 print(f"priced decode step: {cost.t_total * 1e3:.3f} ms resident vs "
       f"{cost.t_sequential_total * 1e3:.3f} ms per-layer re-staging "
       f"({cost.residency_speedup:.2f}x; {cost.waves_shared} waves fused, "
-      f"weight_load_bits={cost.weight_load_bits})")
+      f"weight_load_bits={cost.weight_load_bits}); executed-wave bank "
+      f"time {measured.t_compute * 1e6:.1f} us at simulated width")

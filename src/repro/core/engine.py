@@ -16,13 +16,16 @@ Phase ② — execute: `gemv()` runs one resident GeMV (steps ②–④ of the
 paper's flow: encode, execute, aggregate), and `compile([...handles...])`
 fuses a decode step's SEQUENCE of resident GeMVs into one `GemvProgram`
 whose interleaved command schedule extends the wave slots across layers
-(`schedule.schedule_program`). The simulator then runs a whole transformer
-block against the staged rows layer by layer without re-staging any weight
-— zero repeated staging, reconciled exactly against the placement's
-one-time `staged` accounting. Outputs and per-tile command counts are
-invariant to wave packing, so the FUSED schedule's effect is timing:
-`timing.price_program` prices it, including cross-layer command-bus
-interleaving and the boundary waves concurrency groups share.
+(`schedule.schedule_program`). The simulator EXECUTES that fused schedule
+directly: `GemvProgram.run` walks the global waves in slot order, one
+batched step per wave — boundary waves advance tiles of several layers'
+layouts at once — against the staged rows, with zero repeated staging
+(reconciled exactly against the placement's one-time `staged` accounting).
+Outputs and per-tile command counts are invariant to wave packing (the
+retained layer-major path is the bit-exactness oracle), so what the
+fusion moves is the wave axis itself: wall-clock, and the executed
+serialization `timing.price_program(..., executed_wave_ops=…)` reconciles
+— the program price is a measurement, not just a model.
 
 Execution backends are first-class `Backend` objects (core.backends): jnp
 oracle / Pallas kernel / PUD simulator, resolved through one registry. The
@@ -42,9 +45,11 @@ from .backends import Backend
 from .bitplane import BitplaneWeights, from_quantized, to_quantized
 from .pud.gemv import (CommandTemplates, GemvCost, PudGeometry, StagedWaves,
                        build_templates, conventional_pud_cost,
-                       mvdram_gemv_batched, mvdram_gemv_cost, stage_matrix)
+                       execute_program, mvdram_gemv_batched,
+                       mvdram_gemv_cost, stage_matrix, stage_program)
 from .pud.residency import DramPool, Placement
-from .pud.schedule import ProgramSchedule, schedule_program, schedule_tiles
+from .pud.schedule import (ProgramSchedule, schedule_batch, schedule_program,
+                           schedule_tiles)
 from .pud.timing import (DDR4_2400, CpuBaseline, DDR4Model, GpuBaseline,
                          ProgramCost, price_gemv, price_program)
 from .quant import (QuantSpec, QuantizedTensor, quantize_activations,
@@ -112,7 +117,6 @@ class GemvHandle:
     placement: Optional[Placement] = None
 
 
-@dataclasses.dataclass
 class ProgramReport:
     """Accounting for decode steps executed through a `GemvProgram`.
 
@@ -122,9 +126,57 @@ class ProgramReport:
     staging was paid ONCE at placement and is recorded in `staged`, which
     reconciles exactly with both the pool's `Placement.staged` spans and
     the per-call oracle's summed `TileReport.preload` (tested).
+
+    Fused wave-major runs (the default) construct the per-layer reports
+    LAZILY from the executor's array-native counts — a timed decode step
+    pays no report-object materialization unless someone reads it. They
+    additionally carry the EXECUTED fused-wave serialization: `fused` is
+    True, `waves` counts the fused waves the step actually ran (== the
+    compiled schedule's), and `wave_max[w]` is the field-wise max over
+    wave w's member tiles — tiles of different layers sharing the wave —
+    of the B-summed per-tile OpCounts. `timing.simulated_wave_time` prices
+    that measured serialization directly, and
+    `MVDRAMEngine.price_program(..., executed=report)` reconciles the
+    analytic program price against it. Layer-major oracle runs report
+    `fused=False` with `waves` = the Σ of per-layer solo wave counts.
     """
 
-    reports: tuple             # (L,) resident BatchReport
+    def __init__(self, reports=None, builder=None, fused: bool = False,
+                 waves: int = 0, wave_max_arr=None, batch: int = 1):
+        self._reports = reports
+        self._builder = builder
+        self.fused = fused
+        self.waves = waves
+        self.batch = batch          # lane batch the step executed
+        self._wave_max_arr = wave_max_arr
+
+    @property
+    def reports(self) -> tuple:
+        if self._reports is None:
+            self._reports = self._builder()
+        return self._reports
+
+    @property
+    def wave_max(self) -> tuple:
+        """(waves,) OpCounts: executed per-fused-wave maxima (empty for
+        layer-major runs — their serialization is per-layer, in
+        `reports[l].wave_max`)."""
+        if self._wave_max_arr is None:
+            return ()
+        from .pud.device import OpCounts
+        return tuple(OpCounts(*map(int, row))
+                     for row in self._wave_max_arr.tolist())
+
+    @property
+    def executed_wave_ops(self) -> tuple:
+        """(waves,) PUD op count per executed fused wave (B-summed) — what
+        the bank-serialization reconciliation consumes."""
+        if self._wave_max_arr is None:
+            return ()
+        from .pud.device import _COUNT_FIELDS
+        idx = [_COUNT_FIELDS.index(f)
+               for f in ("row_copy", "maj3", "maj5", "majx_other")]
+        return tuple(int(r) for r in self._wave_max_arr[:, idx].sum(axis=1))
 
     @property
     def layers(self) -> int:
@@ -158,10 +210,13 @@ class GemvProgram:
     q/k/v or up/gate share boundary waves), and each layer's weight
     bit-planes are staged into resident `BankArray`s exactly once. `run`
     then executes any number of decode steps against those rows with zero
-    re-staging — layer by layer through the staged executor, since outputs
-    and per-tile command counts don't depend on wave packing; the fused
-    schedule itself is the program's COMMAND/TIMING model, which `price`
-    evaluates (one fused step vs the per-layer re-staging baseline).
+    re-staging — WAVE-MAJOR by default: the simulator walks the fused
+    schedule's slot order directly, one batched step per global wave, with
+    boundary waves advancing tiles of several layers' layouts at once
+    (`gemv.stage_program`/`execute_program`). The retained layer-by-layer
+    path (`run(..., layer_major=True)`) is the bit-exactness oracle:
+    outputs and per-tile command counts are identical, only the wave axis
+    — wall-clock and the executed serialization `price` reconciles — moves.
     """
 
     def __init__(self, engine: "MVDRAMEngine", handles: tuple,
@@ -171,6 +226,8 @@ class GemvProgram:
         self.sched = sched
         self.groups = groups
         self.steps = 0
+        self._fused = None          # gemv.FusedProgram, built lazily
+        self._fused_staged = None   # the StagedWaves the plan indexes
 
     @property
     def layers(self) -> int:
@@ -181,44 +238,121 @@ class GemvProgram:
                 f"{self.sched.tiles} tiles, {self.sched.waves} waves "
                 f"({self.sched.waves_shared} shared)>")
 
-    def run(self, activations: Sequence[jax.Array]):
+    def _check_layer(self, h) -> None:
+        if h.a_spec is None:
+            raise ValueError(
+                f"layer {h.name!r} serves float activations — there is "
+                f"no bit-serial command stream to run in the simulator")
+
+    def _staged_layers(self) -> tuple:
+        staged = []
+        for h in self.handles:
+            st = self.engine.staged_for(h)
+            if st is None:
+                raise ValueError(
+                    f"layer {h.name!r} is no longer resident (evicted?); "
+                    f"re-register it before running the program")
+            staged.append(st)
+        return tuple(staged)
+
+    def run(self, activations: Sequence[jax.Array],
+            layer_major: bool = False):
         """Execute one decode step: activations[l] is layer l's (B, N_l)
         lane batch (or an (N_l,) vector, promoted to B=1). Returns
         ([(B, M_l) outputs], `ProgramReport`) — outputs and per-tile
         runtime OpCounts bit-identical to sequential per-layer `gemv`,
-        with no weight row re-staged (tested)."""
+        with no weight row re-staged (tested).
+
+        The default path executes the FUSED wave schedule directly (one
+        batched simulator step per global wave, cross-layer boundary waves
+        included); `layer_major=True` runs the retained per-layer oracle.
+        The fused path requires every layer to carry the same lane batch —
+        one decode step, one set of lanes."""
         import jax.numpy as jnp
         if len(activations) != self.layers:
             raise ValueError(
                 f"{len(activations)} activations for a {self.layers}-layer "
                 f"program")
-        outs, reports = [], []
+        if layer_major:
+            outs, reports = [], []
+            for h, x, staged in zip(self.handles, activations,
+                                    self._staged_layers()):
+                self._check_layer(h)
+                x = jnp.asarray(x)
+                squeeze = x.ndim == 1
+                if squeeze:
+                    x = x[None, :]
+                # the same resident launch the sim backend executes
+                out, rep = self.engine.run_resident(h, x, staged)
+                outs.append(jnp.asarray(out[0] if squeeze else out))
+                reports.append(rep)
+            self.steps += 1
+            return outs, ProgramReport(
+                reports=tuple(reports), fused=False,
+                waves=sum(r.waves for r in reports),
+                batch=reports[0].batch if reports else 1)
+
+        xs, squeezes = [], []
         for h, x in zip(self.handles, activations):
-            if h.a_spec is None:
-                raise ValueError(
-                    f"layer {h.name!r} serves float activations — there is "
-                    f"no bit-serial command stream to run in the simulator")
+            self._check_layer(h)
             x = jnp.asarray(x)
             squeeze = x.ndim == 1
             if squeeze:
                 x = x[None, :]
-            staged = self.engine.staged_for(h)
-            if staged is None:
-                raise ValueError(
-                    f"layer {h.name!r} is no longer resident (evicted?); "
-                    f"re-register it before running the program")
-            # the same resident launch the sim backend executes
-            out, rep = self.engine.run_resident(h, x, staged)
-            outs.append(jnp.asarray(out[0] if squeeze else out))
-            reports.append(rep)
+            xs.append(x)
+            squeezes.append(squeeze)
+        staged = self._staged_layers()
+        if (self._fused is None or self._fused_staged is None
+                or any(a is not b
+                       for a, b in zip(self._fused_staged, staged))):
+            # (re)index the fused plan over the CURRENT resident rows —
+            # eviction/re-registration or pool compaction re-stages a
+            # layer, and the plan must follow it
+            self._fused = stage_program(staged, self.sched)
+            self._fused_staged = staged
+        aqs = [quantize_activations(x, h.a_spec)
+               for h, x in zip(self.handles, xs)]
+        res = execute_program(
+            self._fused, aqs, [h.wq for h in self.handles],
+            [h.templates for h in self.handles],
+            sparsity=self.engine.sparsity)
+        for h in self.handles:
+            self.engine.pool.touch(h.name)
+        report = ProgramReport(
+            builder=_resident_report_builder(staged, res, self.engine.geom),
+            fused=True, waves=res.waves, wave_max_arr=res.wave_max,
+            batch=xs[0].shape[0] if xs else 1)
+        outs = [jnp.asarray(o[0] if sq else o)
+                for o, sq in zip(res.outs, squeezes)]
         self.steps += 1
-        return outs, ProgramReport(reports=tuple(reports))
+        return outs, report
 
     def price(self, bit_density: float = 0.5, batch: int = 1,
-              usable_cols: Optional[int] = None) -> ProgramCost:
+              usable_cols: Optional[int] = None,
+              executed: Optional[ProgramReport] = None) -> ProgramCost:
         return self.engine.price_program(self, bit_density=bit_density,
                                          batch=batch,
-                                         usable_cols=usable_cols)
+                                         usable_cols=usable_cols,
+                                         executed=executed)
+
+
+def _resident_report_builder(staged_layers: tuple, res, geom: PudGeometry):
+    """Deferred per-layer `BatchReport` construction for a fused run — the
+    reports are bit-identical to the layer-major oracle's but only
+    materialize when read, keeping the hot decode path array-native."""
+    def build():
+        from .pud.gemv import _build_batch_report
+        import numpy as np
+        reps = []
+        for st, rt, sk, rb in zip(staged_layers, res.rt_arrs, res.skipped,
+                                  res.r_bits):
+            bsched = schedule_batch(st.n_chunks, st.col_chunks,
+                                    rt.shape[0], geom)
+            reps.append(_build_batch_report(
+                st, bsched, rt, np.zeros_like(st.preload), sk, rb,
+                resident=True))
+        return tuple(reps)
+    return build
 
 
 class MVDRAMEngine:
@@ -245,6 +379,10 @@ class MVDRAMEngine:
         # pool-driven evictions (LRU on_full, replace) must drop the staged
         # rows and invalidate the handle's placement just like engine.evict
         self.pool.evict_listeners.append(self._on_pool_evict)
+        # pool compaction physically moves resident rows: the staged
+        # BankArrays no longer mirror them, so drop them (they restage
+        # lazily against the new spans) and follow the placement update
+        self.pool.move_listeners.append(self._on_pool_move)
 
     def _on_pool_evict(self, name: str, placement: Placement) -> None:
         self._staged.pop(name, None)
@@ -253,6 +391,13 @@ class MVDRAMEngine:
         h = self.handles.get(name)
         if h is not None and h.placement is placement:
             h.placement = None
+
+    def _on_pool_move(self, name: str, old: Placement,
+                      new: Placement) -> None:
+        self._staged.pop(name, None)
+        h = self.handles.get(name)
+        if h is not None and h.placement is old:
+            h.placement = new
 
     # -- phase ①: place (weights into "DRAM") ---------------------------------
 
@@ -439,6 +584,17 @@ class MVDRAMEngine:
                    for h in handles)
         if not hs:
             raise ValueError("compile() needs at least one handle")
+        names = [h.name for h in hs]
+        if len(set(names)) != len(names):
+            # tied weights: the fused executor gathers per-tile counts from
+            # each layer's resident bank ledger — two program layers
+            # sharing one ledger would double-bill both. Register the
+            # matrix under a second name to apply it twice per step.
+            dup = sorted({n for n in names if names.count(n) > 1})
+            raise ValueError(
+                f"handle(s) {dup} appear more than once in the program; "
+                f"register tied weights under distinct names to reuse a "
+                f"matrix within one decode step")
         for h in hs:
             if not self.pool.is_resident(h.name):
                 raise ValueError(
@@ -455,16 +611,44 @@ class MVDRAMEngine:
 
     def price_program(self, program: GemvProgram, bit_density: float = 0.5,
                       batch: int = 1,
-                      usable_cols: Optional[int] = None) -> ProgramCost:
+                      usable_cols: Optional[int] = None,
+                      executed: Optional[ProgramReport] = None
+                      ) -> ProgramCost:
         """DDR4 price of one fused decode step. Defaults to the SIMULATED
         column width so `staged_bits` reconciles exactly with the pool's
         placement accounting and the resident `BatchReport`s (tested);
         pass `usable_cols=geom.real_cols` for paper-scale pricing — the
         schedule is then re-fused over the real-width tile grids (schedule
         and costs must share one column basis) with the SAME concurrency
-        groups, so q/k/v-style groups fill the otherwise idle rank."""
+        groups, so q/k/v-style groups fill the otherwise idle rank.
+
+        `executed` — the `ProgramReport` of a fused wave-major `run` —
+        reconciles the bank-serialization term against the EXECUTED
+        fused-wave counts instead of the analytic per-layer estimate: the
+        measured per-wave maxima (B lanes already summed) replace
+        `bit_density`-expected ops, turning the program price into a
+        measurement. Only valid at the simulated column width (that is
+        what executed) and for a fused run's report."""
         cols = usable_cols if usable_cols is not None else \
             self.geom.subarray_cols
+        executed_wave_ops = None
+        if executed is not None:
+            if cols != self.geom.subarray_cols:
+                raise ValueError(
+                    "executed fused-wave counts are measured at the "
+                    "simulated column width; price real-width schedules "
+                    "analytically")
+            if not executed.fused:
+                raise ValueError(
+                    "executed reconciliation needs a fused wave-major "
+                    "run's ProgramReport (run(..., layer_major=True) "
+                    "reports have no fused-wave counts)")
+            if executed.batch != batch:
+                raise ValueError(
+                    f"executed fused-wave counts sum a B={executed.batch} "
+                    f"lane batch; pricing at batch={batch} would mix it "
+                    f"with analytic terms at a different batch")
+            executed_wave_ops = executed.executed_wave_ops
         costs = []
         for h in program.handles:
             p = h.plan
@@ -481,7 +665,8 @@ class MVDRAMEngine:
                 grids.append((plan.n_chunks, plan.col_chunks))
             sched = schedule_program(grids, self.geom, groups=program.groups)
         return price_program(costs, sched, batch=batch,
-                             geom=self.geom, model=self.timing)
+                             geom=self.geom, model=self.timing,
+                             executed_wave_ops=executed_wave_ops)
 
     # -- pricing (paper-faithful DDR4 numbers) --------------------------------
 

@@ -11,6 +11,8 @@
                  (channel, bank, row-range) homes; multi-layer co-residency
 `gemv.py`      — on-the-fly vector encoding → in-DRAM GeMV execution,
                  including staged (resident) execution with zero re-staging
+                 and the fused wave-major program executor (one batched
+                 step per cross-layer wave)
 `timing.py`    — DDR4-2400 command timing + energy model, CPU/GPU baselines,
                  compiled-program pricing
 """
@@ -22,10 +24,11 @@ from .schedule import (BatchSchedule, ProgramSchedule, ProgramSlot,
 from .residency import (CapacityError, DramPool, Placement, ResidencyError,
                         RowSpan, tile_resident_rows)
 from .gemv import (BatchReport, BatchTemplatePlan, CommandTemplates,
-                   StagedWaves, TemplatePlan, build_templates,
-                   conventional_pud_cost, mvdram_gemv, mvdram_gemv_batched,
+                   FusedProgram, ProgramRunResult, StagedWaves,
+                   TemplatePlan, build_templates, conventional_pud_cost,
+                   execute_program, mvdram_gemv, mvdram_gemv_batched,
                    mvdram_gemv_subarray, select_templates,
-                   select_templates_batched, stage_matrix)
+                   select_templates_batched, stage_matrix, stage_program)
 from .timing import (BatchedPudCost, DDR4Model, CpuBaseline, GpuBaseline,
                      ProgramCost, PudCost, TPU_V5E, DDR4_2400, bank_waves,
                      price_gemv_batched, price_program, simulated_wave_time)

@@ -30,6 +30,8 @@ Three execution granularities share the same command accounting:
 """
 from __future__ import annotations
 
+import functools
+
 import numpy as np
 
 from .device import BankArray, OpCounts, Subarray
@@ -114,12 +116,15 @@ def clear_accumulator(sub: Subarray | BankArray,
         sub.row_copy(lay.one_row, lay.acc_c_rows[b])
 
 
+@functools.lru_cache(maxsize=None)
 def adder_cost(chain_len: int) -> OpCounts:
     """Op count of one `add_row_at_offset` with the given ripple length.
 
     Per bit 22 RowCopy + 2 MAJ3 + 2 MAJ5; +2 RowCopy carry-track
     initialization. This IS the static command template for one add —
     the stream depends only on (offset, chain_len), never on in-DRAM data.
+    Cached per chain length (executors re-derive it every launch); callers
+    treat the returned OpCounts as immutable, like the template instances.
     """
     return OpCounts(row_copy=22 * chain_len + 2, maj3=2 * chain_len,
                     maj5=2 * chain_len)
@@ -174,7 +179,8 @@ def add_rows_batched(sub: Subarray, lay: HorizontalLayout,
 # ---------------------------------------------------------------------------
 
 def write_accumulator_wave(bank: BankArray, lay: HorizontalLayout,
-                           acc_val: np.ndarray) -> None:
+                           acc_val: np.ndarray,
+                           tiles: np.ndarray | None = None) -> None:
     """Materialize the running accumulator VALUE into the accumulator rows
     (+ complement track) of every bank of the wave.
 
@@ -187,6 +193,12 @@ def write_accumulator_wave(bank: BankArray, lay: HorizontalLayout,
     Batched acc_val (B, tiles, cols): the B requests time-share the physical
     rows, so the LAST request's accumulator is the state the bank is left
     in — that is what gets materialized.
+
+    `tiles` restricts the write to a subset of the bank's tile positions
+    (acc_val then carries that subset on its tile axis) — a fused
+    cross-layer wave touches only the SEGMENT of each layer's resident bank
+    that executes in this wave, and leaves the other tiles' rows at their
+    previous occupant, exactly like real time-shared banks.
     """
     if acc_val.ndim == 3:
         acc_val = acc_val[-1]       # the bank's final time-shared occupant
@@ -196,6 +208,20 @@ def write_accumulator_wave(bank: BankArray, lay: HorizontalLayout,
     new_bits = ((acc_val.astype(np.int32)[..., None, :]
                  >> np.arange(lay.r, dtype=np.int32)[:, None]) & 1
                 ).astype(np.uint8)
+    if tiles is not None:
+        t_idx = np.asarray(tiles)[:, None]
+        if bank.all_reliable:
+            bank.data[t_idx, acc_idx[None, :], :] = new_bits
+            bank.data[t_idx, acc_c_idx[None, :], :] = 1 - new_bits
+        else:
+            rel = bank.reliable
+            old = bank.data[t_idx, acc_idx[None, :], :]
+            old_c = bank.data[t_idx, acc_c_idx[None, :], :]
+            bank.data[t_idx, acc_idx[None, :], :] = np.where(
+                rel, new_bits, old)
+            bank.data[t_idx, acc_c_idx[None, :], :] = np.where(
+                rel, 1 - new_bits, old_c)
+        return
     if bank.all_reliable:
         bank.data[..., acc_idx, :] = new_bits
         bank.data[..., acc_c_idx, :] = 1 - new_bits

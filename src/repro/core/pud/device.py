@@ -134,10 +134,24 @@ class BankArray:
     selection); `tile_counts()` materializes the per-tile totals — per
     (request, tile) when batched — which are identical to what the
     sequential per-tile oracle counts (tested).
+
+    Fused cross-layer waves: the per-tile ledger spans EVERY count field, so
+    tiles with heterogeneous layouts (different accumulator widths r, bit
+    widths q/p, row maps — i.e. tiles of DIFFERENT layers sharing one wave)
+    can each be billed their own clear/add/readout commands in one
+    vectorized `charge_counts` step; `write_accumulator_wave(..., tiles=…)`
+    materializes a wave segment's final accumulator state into just the
+    banks that wave touched. This is what lets the program executor advance
+    a fused wave spanning two layers' layouts as a single batched step.
     """
 
-    # per-tile ledger columns (the only fields that vary within a wave)
-    _RC, _M3, _M5, _HI = range(4)
+    # ledger columns for the narrow charge helpers (full `_COUNT_FIELDS`
+    # order — the ledger carries every field so heterogeneous-layout charges
+    # like per-tile readout traffic have a per-tile home)
+    _RC = _COUNT_FIELDS.index("row_copy")
+    _M3 = _COUNT_FIELDS.index("maj3")
+    _M5 = _COUNT_FIELDS.index("maj5")
+    _HI = _COUNT_FIELDS.index("host_int_ops")
 
     def __init__(self, tiles: int, rows: int = 512, cols: int = 1024,
                  reliable_cols: np.ndarray | None = None,
@@ -152,7 +166,8 @@ class BankArray:
                          else reliable_cols.astype(bool))
         self.all_reliable = bool(self.reliable.all())
         self.shared = OpCounts()
-        self.extra = np.zeros(lead + (tiles, 4), dtype=np.int64)
+        self.extra = np.zeros(lead + (tiles, len(_COUNT_FIELDS)),
+                              dtype=np.int64)
 
     # -- broadcast PUD primitives (one command, all banks of the wave) -------
 
@@ -223,8 +238,20 @@ class BankArray:
         its own outputs back)."""
         self.extra[..., self._HI] += n_per_tile
 
-    # ledger column ↔ OpCounts field, in _RC/_M3/_M5/_HI order
-    _LEDGER_FIELDS = ("row_copy", "maj3", "maj5", "host_int_ops")
+    def charge_counts(self, delta: np.ndarray,
+                      tiles: np.ndarray | None = None) -> None:
+        """Merge a per-tile count-delta block into the ledger.
+
+        delta: (…, T, len(_COUNT_FIELDS)) int64, `_COUNT_FIELDS` order —
+        heterogeneous per-tile charges (each tile its OWN layout's clear /
+        add / readout commands, as a fused cross-layer wave needs). `tiles`
+        restricts the charge to those ledger positions (a wave SEGMENT of
+        this bank); positions must be unique within one call.
+        """
+        if tiles is None:
+            self.extra += delta
+        else:
+            self.extra[..., np.asarray(tiles), :] += delta
 
     def counts_matrix(self) -> np.ndarray:
         """Per-tile totals as a (…, tiles, len(_COUNT_FIELDS)) int64 matrix
@@ -232,11 +259,7 @@ class BankArray:
         aggregates without materializing per-tile OpCounts objects."""
         base = np.array([getattr(self.shared, f) for f in _COUNT_FIELDS],
                         dtype=np.int64)
-        out = np.broadcast_to(
-            base, self.extra.shape[:-1] + (len(_COUNT_FIELDS),)).copy()
-        for col, fname in enumerate(self._LEDGER_FIELDS):
-            out[..., _COUNT_FIELDS.index(fname)] += self.extra[..., col]
-        return out
+        return base + self.extra
 
     def tile_counts(self):
         """Per-tile totals: (tiles,) list, or (batch, tiles) nested lists in
@@ -262,4 +285,5 @@ class BankArray:
         self.batch = batch
         lead = () if batch is None else (batch,)
         self.shared = OpCounts()
-        self.extra = np.zeros(lead + (self.tiles, 4), dtype=np.int64)
+        self.extra = np.zeros(lead + (self.tiles, len(_COUNT_FIELDS)),
+                              dtype=np.int64)

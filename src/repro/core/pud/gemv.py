@@ -82,8 +82,9 @@ from .adder import (add_row_at_offset, add_rows_batched, adder_cost,
 from .device import _COUNT_FIELDS, BankArray, OpCounts, Subarray
 from .layout import (HorizontalLayout, VerticalLayout,
                      accumulator_width)
-from .schedule import (BatchSchedule, PudGeometry,  # noqa: F401 (re-export)
-                       WaveSchedule, schedule_batch, schedule_tiles)
+from .schedule import (BatchSchedule, ProgramSchedule,  # noqa: F401 (re-export)
+                       PudGeometry, WaveSchedule, schedule_batch,
+                       schedule_tiles)
 
 
 # ---------------------------------------------------------------------------
@@ -1011,11 +1012,30 @@ def mvdram_gemv_batched(aq: QuantizedTensor, wq: QuantizedTensor,
     # preload (recorded in `StagedWaves.preload` / `Placement.staged`).
     pre_arr = (np.zeros_like(staged.preload) if resident
                else staged.preload)
+    report = _build_batch_report(staged, bsched, rt_arrs, pre_arr,
+                                 skipped_b, r_bits, resident)
 
-    # Per-request reports (oracle-identical) + shared batch accounting. The
-    # staging counts are batch-invariant (weights loaded once, every request
-    # sees the same resident rows), so the preload tuple is built once and
-    # shared by all request views.
+    out = _aggregate_host(partials, a_u, w_u, aq, wq, n_chunks, n_sub, gs, g)
+    out = out * np.asarray(aq.scale, dtype=np.float64).reshape(B, 1)
+    return out.astype(np.float32), report
+
+
+def _build_batch_report(staged: StagedWaves, bsched: BatchSchedule,
+                        rt_arrs: np.ndarray, pre_arr: np.ndarray,
+                        skipped_b: np.ndarray, r_bits: int,
+                        resident: bool) -> BatchReport:
+    """Materialize per-request `TileReport`s + shared batch accounting from
+    array-native executor counts. Shared by the batched launch path and the
+    fused program executor's LAZY report builder — both produce the same
+    per-(request, tile) numbers, so the report shape is identical.
+
+    The staging counts are batch-invariant (weights loaded once, every
+    request sees the same resident rows), so the preload tuple is built once
+    and shared by all request views.
+    """
+    B = rt_arrs.shape[0]
+    n_chunks, col_chunks = staged.n_chunks, staged.col_chunks
+    geom = staged.geom
     tiles = n_chunks * col_chunks
     agg_bits = tiles * r_bits * geom.subarray_cols
     pt = geom.parallel_tiles
@@ -1036,19 +1056,14 @@ def mvdram_gemv_batched(aq: QuantizedTensor, wq: QuantizedTensor,
     # Physical shared accounting: weight staging once (zero when resident);
     # the B compute streams time-share each bank, so a wave is bound by its
     # slowest SUMMED tile.
-    shared_preload = preload   # the per-request view IS the one staging pass
     batch_runtime = OpCounts(*map(int, rt_arrs.sum(axis=(0, 1))))
     batch_wave_max = _wave_maxima(rt_arrs.sum(axis=0), bsched.waves, pt)
-    report = BatchReport(batch=B, schedule=bsched, requests=tuple(requests),
-                         shared_preload=shared_preload,
-                         runtime=batch_runtime,
-                         wave_max=tuple(batch_wave_max),
-                         resident=resident,
-                         staged=staged.staged_counts)
-
-    out = _aggregate_host(partials, a_u, w_u, aq, wq, n_chunks, n_sub, gs, g)
-    out = out * np.asarray(aq.scale, dtype=np.float64).reshape(B, 1)
-    return out.astype(np.float32), report
+    return BatchReport(batch=B, schedule=bsched, requests=tuple(requests),
+                       shared_preload=preload,
+                       runtime=batch_runtime,
+                       wave_max=tuple(batch_wave_max),
+                       resident=resident,
+                       staged=staged.staged_counts)
 
 
 def _check_staged(staged: StagedWaves, n: int, m: int, q: int, p: int,
@@ -1065,6 +1080,350 @@ def _check_staged(staged: StagedWaves, n: int, m: int, q: int, p: int,
         raise ValueError(
             f"staged output slots ({staged.m_per_tile}/tile) do not match "
             f"this launch's reliability mask ({slots.shape[0]}/tile)")
+
+
+# ---------------------------------------------------------------------------
+# Fused cross-layer wave execution: run a whole decode step's GeMV sequence
+# WAVE-MAJOR through `schedule.schedule_program`'s fused slot order. One
+# batched step advances every tile of a global wave — tiles drawn from
+# DIFFERENT layers' layouts (heterogeneous per-tile row maps, bit widths
+# q/p, accumulator widths r, scale groups) — against the layers' resident
+# staged rows. Staging is untouched: the plan only indexes into the
+# `StagedWaves` the placements already paid for.
+# ---------------------------------------------------------------------------
+
+_F = len(_COUNT_FIELDS)
+_RC_I = _COUNT_FIELDS.index("row_copy")
+_M3_I = _COUNT_FIELDS.index("maj3")
+_M5_I = _COUNT_FIELDS.index("maj5")
+_HBR_I = _COUNT_FIELDS.index("host_bits_read")
+_HIO_I = _COUNT_FIELDS.index("host_int_ops")
+
+
+@dataclasses.dataclass
+class FusedSegment:
+    """One contiguous run of a single layer-group's tiles inside one fused
+    wave — the unit that touches a resident `BankArray` (charge + final
+    accumulator materialization)."""
+
+    group: StagedGroup
+    pos: np.ndarray            # (T_seg,) tile positions inside group.bank
+    lo: int                    # [lo, hi) slice of the wave's tile axis
+    hi: int
+
+
+@dataclasses.dataclass
+class FusedWave:
+    """One global wave of the fused schedule: slots [lo, hi) of the plan's
+    slot-ordered arrays, outputs [out_lo, out_hi) of the flat gather index,
+    split into per-(layer, group) segments."""
+
+    lo: int
+    hi: int
+    out_lo: int
+    out_hi: int
+    segments: list             # (FusedSegment,)
+
+
+@dataclasses.dataclass
+class FusedProgram:
+    """Executable wave-major plan for one compiled decode program.
+
+    Built once (`stage_program`) from the layers' already-resident
+    `StagedWaves` and the fused `ProgramSchedule`; every array is in global
+    SLOT order (slots are wave-contiguous), so executing wave w is slicing
+    [lo, hi) out of each and issuing one batched step:
+
+      matrix[lo:hi]   (T_w, n_pad, cols) resident weight rows, zero-padded
+                      past each tile's own reduction depth — one BLAS
+                      matmul advances the whole wave even when its tiles
+                      come from layers with different n_sub/q/p.
+      static[lo:hi]   per-tile data-INdependent charges (each tile's own
+                      layout: 2·r clear copies, r·cols readout bits,
+                      m_sub·q host aggregation ops).
+      add_rc/add_m3   per-(tile, bit-offset) static add-template costs —
+                      one einsum against the popcount selections bills the
+                      whole wave's data-dependent commands.
+      colidx/mult     per-tile readout gather (each tile's own slot columns
+                      and weight-bit shifts; `mult` is zero on padding).
+
+    Heterogeneous charging and the per-segment accumulator writes go
+    through the extended `device.BankArray` APIs (`charge_counts`,
+    `write_accumulator_wave(tiles=…)`), so the resident banks remain the
+    accounting + bit-state authority exactly as in layer-major execution.
+    """
+
+    sched: ProgramSchedule
+    stageds: tuple             # (L,) StagedWaves (resident, NOT re-staged)
+    geom: PudGeometry
+    n_pad: int
+    p_max: int
+    chunk0: np.ndarray         # (L+1,) global chunk-id offsets
+    out0: np.ndarray           # (L+1,) flat-output offsets (n_chunks·m each)
+    matrix: np.ndarray         # (S, n_pad, cols) float32
+    gchunk: np.ndarray         # (S,) global chunk ids
+    mask_r: np.ndarray         # (S, 1) accumulator masks (1<<r)−1
+    static: np.ndarray         # (S, _F) data-independent per-tile charges
+    add_rc: np.ndarray         # (S, p_max) RowCopies per add at offset k
+    add_m3: np.ndarray         # (S, p_max) MAJ3 (== MAJ5) per add at offset k
+    colidx: np.ndarray         # (S, m_max, q_max) readout column gather
+    mult: np.ndarray           # (S, m_max, q_max) weight-bit shifts (0 = pad)
+    valid: np.ndarray          # (S, m_max) live outputs
+    gout: np.ndarray           # (n_valid,) flat global output indices
+    waves: list                # (W,) FusedWave
+
+    @property
+    def layers(self) -> int:
+        return len(self.stageds)
+
+    @property
+    def tiles(self) -> int:
+        return self.sched.tiles
+
+
+def stage_program(stageds, sched: ProgramSchedule) -> FusedProgram:
+    """Index L layers' resident staged rows into one wave-major plan.
+
+    No weight row is copied INTO the device here — `matrix` gathers the
+    float32 execution-side blocks the per-layer staging already built (the
+    same blocks the layer-major path matmuls against), zero-padded to the
+    program's deepest reduction chunk so one batched step spans layouts.
+    """
+    stageds = tuple(stageds)
+    if len(stageds) != sched.layers:
+        raise ValueError(
+            f"{len(stageds)} staged layers for a {sched.layers}-layer "
+            f"schedule")
+    for l, st in enumerate(stageds):
+        if st.tiles != sched.layer_tiles[l]:
+            raise ValueError(
+                f"layer {l} stages {st.tiles} tiles but the schedule "
+                f"places {sched.layer_tiles[l]}")
+    geom = stageds[0].geom
+    cols = geom.subarray_cols
+    # per-layer tile -> (StagedGroup, position inside the group's bank)
+    tile_maps = []
+    for st in stageds:
+        tm = {}
+        for g in st.groups:
+            for pos, t in enumerate(g.tiles_idx.tolist()):
+                tm[t] = (g, pos)
+        tile_maps.append(tm)
+    chunk0 = np.cumsum([0] + [st.n_chunks for st in stageds])
+    out0 = np.cumsum([0] + [st.n_chunks * st.m for st in stageds])
+    n_pad = max(st.n_sub for st in stageds)
+    p_max = max(st.p for st in stageds)
+    m_max = max(st.m_per_tile for st in stageds)
+    q_max = max(st.q for st in stageds)
+    S = sched.tiles
+    matrix = np.zeros((S, n_pad, cols), dtype=np.float32)
+    gchunk = np.zeros(S, dtype=np.int64)
+    mask_r = np.zeros((S, 1), dtype=np.int64)
+    static = np.zeros((S, _F), dtype=np.int64)
+    add_rc = np.zeros((S, p_max), dtype=np.int64)
+    add_m3 = np.zeros((S, p_max), dtype=np.int64)
+    colidx = np.zeros((S, m_max, q_max), dtype=np.int64)
+    mult = np.zeros((S, m_max, q_max), dtype=np.int64)
+    valid = np.zeros((S, m_max), dtype=bool)
+    gout_parts, m_sub_per_slot = [], np.zeros(S, dtype=np.int64)
+
+    for s_i, slot in enumerate(sched.slots):
+        st = stageds[slot.layer]
+        g, pos = tile_maps[slot.layer][slot.tile]
+        lay = g.lay
+        r = lay.r
+        matrix[s_i, :lay.n_sub] = g.matrix_block[pos]
+        gchunk[s_i] = chunk0[slot.layer] + slot.chunk
+        mask_r[s_i] = (1 << r) - 1
+        m_sub = int(g.m_subs[pos])
+        static[s_i, _RC_I] = 2 * r                # clear_accumulator
+        static[s_i, _HBR_I] = r * cols            # accumulator readout
+        static[s_i, _HIO_I] = m_sub * st.q        # host shift-accumulate
+        for k in range(st.p):
+            c = adder_cost(r - k)
+            add_rc[s_i, k] = c.row_copy
+            add_m3[s_i, k] = c.maj3               # maj5 charge is identical
+        colidx[s_i, :st.m_per_tile, :st.q] = \
+            st.slot_cols.reshape(st.m_per_tile, st.q)
+        mult[s_i, :m_sub, :st.q] = 1 << np.arange(st.q, dtype=np.int64)
+        valid[s_i, :m_sub] = True
+        m_sub_per_slot[s_i] = m_sub
+        m0 = slot.col_chunk * st.m_per_tile
+        gout_parts.append(out0[slot.layer] + slot.chunk * st.m
+                          + m0 + np.arange(m_sub, dtype=np.int64))
+    gout = (np.concatenate(gout_parts) if gout_parts
+            else np.zeros(0, dtype=np.int64))
+    out_ptr = np.concatenate([[0], np.cumsum(m_sub_per_slot)])
+
+    # wave boundaries (slots are wave-contiguous) + per-(layer, group)
+    # segments inside each wave
+    waves = []
+    w_lo = 0
+    for s_i in range(1, S + 1):
+        if s_i < S and sched.slots[s_i].wave == sched.slots[w_lo].wave:
+            continue
+        segments = []
+        seg_lo = w_lo
+        for j in range(w_lo + 1, s_i + 1):
+            here = (None if j == s_i
+                    else tile_maps[sched.slots[j].layer]
+                    [sched.slots[j].tile][0])
+            prev = tile_maps[sched.slots[j - 1].layer][sched.slots[j - 1].tile][0]
+            if here is not prev:
+                pos = np.asarray(
+                    [tile_maps[sched.slots[k].layer][sched.slots[k].tile][1]
+                     for k in range(seg_lo, j)], dtype=np.int64)
+                segments.append(FusedSegment(group=prev, pos=pos,
+                                             lo=seg_lo - w_lo, hi=j - w_lo))
+                seg_lo = j
+        waves.append(FusedWave(lo=w_lo, hi=s_i,
+                               out_lo=int(out_ptr[w_lo]),
+                               out_hi=int(out_ptr[s_i]),
+                               segments=segments))
+        w_lo = s_i
+    return FusedProgram(sched=sched, stageds=stageds, geom=geom,
+                        n_pad=n_pad, p_max=p_max, chunk0=chunk0, out0=out0,
+                        matrix=matrix, gchunk=gchunk, mask_r=mask_r,
+                        static=static, add_rc=add_rc, add_m3=add_m3,
+                        colidx=colidx, mult=mult, valid=valid, gout=gout,
+                        waves=waves)
+
+
+@dataclasses.dataclass
+class ProgramRunResult:
+    """Array-native result of one fused wave-major decode step.
+
+    `wave_max[w]` is the field-wise max over wave w's member tiles of the
+    B-summed per-tile counts — the EXECUTED fused-wave serialization that
+    `timing.simulated_wave_time` prices and `price_program(executed=…)`
+    reconciles against the schedule it fused. Per-(request, tile) counts
+    (`rt_arrs`, gathered back from the resident banks' ledgers) are
+    bit-identical to the layer-major oracle's (tested).
+    """
+
+    outs: list                 # (L,) float32 (B, M_l)
+    rt_arrs: list              # (L,) (B, tiles_l, _F) runtime counts
+    skipped: list              # (L,) (B,) skipped zero bits per request
+    r_bits: list               # (L,) max accumulator width per layer
+    wave_max: np.ndarray       # (W, _F) executed per-wave maxima (B-summed)
+
+    @property
+    def waves(self) -> int:
+        return self.wave_max.shape[0]
+
+
+def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
+                    sparsity: bool = True) -> ProgramRunResult:
+    """One decode step, wave-major: encode every layer's (B, N_l) lane batch
+    once, then walk the fused schedule's waves — each wave ONE batched step
+    (padded code gather → one BLAS matmul across all member tiles, even
+    when they belong to different layers → vectorized heterogeneous
+    charges → per-segment accumulator materialization into the resident
+    banks). Zero weight staging: the plan only reads resident rows.
+
+    Outputs and per-(request, tile) OpCounts are bit-identical to executing
+    the layers one at a time through `_execute_staged` (the layer-major
+    oracle, property-tested); only the WAVE axis — and hence wall-clock and
+    the executed wave serialization — changes.
+    """
+    L = plan.layers
+    if len(aqs) != L or len(wqs) != L:
+        raise ValueError(f"{len(aqs)} activations / {len(wqs)} weights for "
+                         f"a {L}-layer plan")
+    if templates_list is None:
+        templates_list = [None] * L
+    cols = plan.geom.subarray_cols
+    C_total = int(plan.chunk0[-1])
+    a_us, aggs = [], []
+    B = None
+    codes_g = popc_g = None
+    skipped, r_bits_l = [], []
+    for l, (aq, st) in enumerate(zip(aqs, plan.stageds)):
+        a_u = np.asarray(aq.values, dtype=np.uint32)
+        if a_u.ndim != 2:
+            raise ValueError(
+                f"fused program execution takes (B, N) lane batches; layer "
+                f"{l} got shape {a_u.shape}")
+        if B is None:
+            B = a_u.shape[0]
+            codes_g = np.zeros((B, C_total, plan.n_pad), dtype=np.float32)
+            popc_g = np.zeros((B, C_total, plan.p_max), dtype=np.int64)
+        elif a_u.shape[0] != B:
+            raise ValueError(
+                f"every layer shares the decode lane batch: layer {l} has "
+                f"B={a_u.shape[0]}, layer 0 has B={B}")
+        codes, popc, zeros, sk, rb = _chunk_arrays_batched(
+            a_u, st.n, st.n_sub, st.p, sparsity, templates_list[l])
+        for ci in range(st.n_chunks):
+            gc = plan.chunk0[l] + ci
+            codes_g[:, gc, :codes[ci].shape[1]] = codes[ci]
+            bill = popc[ci] if zeros[ci] is None else popc[ci] + zeros[ci]
+            popc_g[:, gc, :st.p] = bill
+        a_us.append(a_u)
+        skipped.append(sk)
+        r_bits_l.append(rb)
+
+    for st in plan.stageds:
+        for g in st.groups:
+            g.bank.set_batch(B)
+
+    # Heterogeneous per-tile charges for the WHOLE program in two einsums:
+    # each slot's own clear/readout/aggregation statics + its own
+    # per-offset add templates times the popcount selection of its
+    # layer-chunk. Command ACCOUNTING is order-independent, so hoisting it
+    # out of the wave walk changes nothing the ledgers see; per-wave maxima
+    # fall out of one segmented reduction over the wave boundaries.
+    popc_s = popc_g[:, plan.gchunk, :]                    # (B, S, p_max)
+    counts_all = np.broadcast_to(plan.static,
+                                 (B,) + plan.static.shape).copy()
+    counts_all[..., _RC_I] += np.einsum("bsk,sk->bs", popc_s, plan.add_rc)
+    m3 = np.einsum("bsk,sk->bs", popc_s, plan.add_m3)
+    counts_all[..., _M3_I] += m3
+    counts_all[..., _M5_I] += m3
+    wave_lo = np.asarray([wv.lo for wv in plan.waves], dtype=np.int64)
+    wave_max = np.maximum.reduceat(counts_all.sum(axis=0), wave_lo, axis=0)
+
+    partials_flat = np.zeros((B, int(plan.out0[-1])), dtype=np.int64)
+    for wv in plan.waves:
+        lo, hi = wv.lo, wv.hi
+        codes_w = codes_g[:, plan.gchunk[lo:hi], :]       # (B, T, n_pad)
+        # §V-D linearity collapse across the WHOLE fused wave: one matmul
+        # advances every member tile, each against its own layer's resident
+        # rows (zero-padding past a tile's reduction depth contributes 0)
+        acc = np.matmul(codes_w.transpose(1, 0, 2),
+                        plan.matrix[lo:hi]).astype(np.int64)
+        acc = acc.transpose(1, 0, 2) & plan.mask_r[lo:hi]  # (B, T, cols)
+        # readout: every tile's own slot columns and q shifts
+        ti = np.arange(hi - lo)
+        vals = (acc[:, ti[:, None, None], plan.colidx[lo:hi]]
+                * plan.mult[lo:hi]).sum(axis=-1)          # (B, T, m_max)
+        partials_flat[:, plan.gout[wv.out_lo:wv.out_hi]] = \
+            vals[:, plan.valid[lo:hi]]
+        # the resident banks stay the accounting + bit-state authority:
+        # bill each segment's ledger and materialize the final time-shared
+        # accumulator state of exactly the tiles this wave advanced
+        for seg in wv.segments:
+            seg.group.bank.charge_counts(
+                counts_all[:, lo + seg.lo:lo + seg.hi], tiles=seg.pos)
+            write_accumulator_wave(seg.group.bank, seg.group.lay,
+                                   acc[-1, seg.lo:seg.hi], tiles=seg.pos)
+
+    rt_arrs, outs = [], []
+    for l, (st, aq, wq) in enumerate(zip(plan.stageds, aqs, wqs)):
+        rt = np.zeros((B, st.tiles, _F), dtype=np.int64)
+        for g in st.groups:
+            rt[:, g.tiles_idx] = g.bank.counts_matrix()
+        rt_arrs.append(rt)
+        w_u = np.asarray(wq.values, dtype=np.uint32)
+        n_sub, n_chunks, gs, grp = _partition_checks(st.n, wq, plan.geom)
+        part = partials_flat[:, plan.out0[l]:plan.out0[l + 1]] \
+            .reshape(B, st.n_chunks, st.m)
+        out = _aggregate_host(part, a_us[l], w_u, aq, wq, n_chunks, n_sub,
+                              gs, grp)
+        out = out * np.asarray(aq.scale, dtype=np.float64).reshape(B, 1)
+        outs.append(out.astype(np.float32))
+    return ProgramRunResult(outs=outs, rt_arrs=rt_arrs, skipped=skipped,
+                            r_bits=r_bits_l, wave_max=wave_max)
 
 
 def _gemv_tile_on_slots(w_tile, a_tile, q, p, sparsity, geom,

@@ -30,7 +30,11 @@ manual `reserve()` pins. Capacity exhaustion either raises `CapacityError`
 (with the per-bank shortfall) or, under `on_full="evict"`, retires
 least-recently-used placements until the new matrix fits — the
 reuse/capacity-managed allocation RACAM and Sangam apply to DRAM-PIM
-(PAPERS.md), with eviction stats kept for the serving layer.
+(PAPERS.md), with eviction stats kept for the serving layer. Eviction
+churn fragments the first-fit row space; `compact()` defragments each
+bank (sliding spans down and notifying `move_listeners` so owners restage
+the moved rows), and `ServeEngine` invokes it on `CapacityError` before
+giving up on a resident decode program.
 """
 from __future__ import annotations
 
@@ -79,6 +83,7 @@ class Placement:
     spans: tuple           # (RowSpan,) one per occupied bank
     staged: OpCounts       # one-time staging traffic paid at placement
     seq: int               # placement sequence number (LRU bookkeeping)
+    pinned: bool = False   # manual reserve(): compaction never moves it
 
     @property
     def tiles(self) -> int:
@@ -126,10 +131,18 @@ class DramPool:
         self._lru: dict[str, int] = {}
         self.evictions = 0
         self.replacements = 0
+        self.compactions = 0
+        self.moved_placements = 0
+        self.restaged_bits = 0     # host writes re-paid for compaction moves
         # called as fn(name, placement) on EVERY eviction — including the
         # pool-driven ones (LRU on_full, replace) — so owners (the engine)
         # can drop staged state and invalidate handles
         self.evict_listeners: list = []
+        # called as fn(name, old_placement, new_placement) when compact()
+        # physically moves a placement's row spans — owners must restage
+        # the moved rows (the engine drops the staged BankArrays; they
+        # rebuild lazily against the new spans)
+        self.move_listeners: list = []
 
     # -- capacity accounting -------------------------------------------------
 
@@ -163,6 +176,9 @@ class DramPool:
             "utilization": self.utilization,
             "evictions": self.evictions,
             "replacements": self.replacements,
+            "compactions": self.compactions,
+            "moved_placements": self.moved_placements,
+            "restaged_bits": self.restaged_bits,
             "staged_bits": sum(p.staged.host_bits_written
                                for p in self.placements.values()),
         }
@@ -275,7 +291,10 @@ class DramPool:
 
     def reserve(self, name: str, spans: Sequence[RowSpan]) -> Placement:
         """Pin an explicit row range (manual placement). Overlap with any
-        resident span — or the per-bank capacity — is rejected."""
+        resident span — or the per-bank capacity — is rejected. Pinned
+        spans are immovable: `compact()` packs pool-driven placements
+        AROUND them, since a caller that fixed absolute row addresses may
+        coordinate them with state the pool cannot see."""
         if name in self.placements:
             raise ResidencyError(f"{name!r} is already resident")
         spans = tuple(spans)
@@ -298,7 +317,7 @@ class DramPool:
             spans=spans,
             staged=OpCounts(host_bits_written=sum(s.rows for s in spans)
                             * self.geom.subarray_cols),
-            seq=self._seq)
+            seq=self._seq, pinned=True)
         self.placements[name] = placement
         self._lru[name] = self._seq
         self._seq += 1
@@ -318,6 +337,72 @@ class DramPool:
         for fn in self.evict_listeners:
             fn(name, placement)
         return placement
+
+    def compact(self) -> dict:
+        """Defragment every bank: slide pool-driven resident spans down so
+        the free rows coalesce.
+
+        First-fit placement leaves unusable gaps after eviction churn — a
+        bank can hold enough free rows in total yet reject a block that
+        needs them contiguous. Compaction moves each bank's movable spans
+        toward the bottom in order (no span ever moves up through
+        another, so every move is downward and stays within capacity),
+        packing AROUND `reserve()` pins, which never move. It rebuilds the
+        affected `Placement`s with the new row ranges and notifies
+        `move_listeners(name, old, new)` so owners restage the moved rows
+        — physically moved weight bit-planes are no longer where the
+        staged `BankArray`s put them. `ServeEngine` calls this on
+        `CapacityError` before giving up on a resident decode program.
+        Returns {"moved": n, "freed_gaps": pre-compaction interior gap
+        rows}.
+        """
+        moved_names: set = set()
+        gap_rows = 0
+        for cb in self._occ:
+            entries = sorted(self._occ[cb])
+            prev_end = 0
+            for row0, row1, _name in entries:
+                gap_rows += row0 - prev_end
+                prev_end = row1
+            pins = [e for e in entries
+                    if self.placements[e[2]].pinned]
+            new_entries = list(pins)
+            cur = 0
+            for row0, row1, name in entries:
+                if self.placements[name].pinned:
+                    continue
+                rows = row1 - row0
+                # skip over any pin the span would overlap; pins are
+                # ascending and cur only grows, so one pass suffices
+                for p0, p1, _p in pins:
+                    if p0 < cur + rows and p1 > cur:
+                        cur = p1
+                if row0 != cur:
+                    moved_names.add(name)
+                new_entries.append((cur, cur + rows, name))
+                cur += rows
+            self._occ[cb] = sorted(new_entries)
+        for name in sorted(moved_names):
+            old = self.placements[name]
+            spans = []
+            for cb in sorted(self._occ):
+                for row0, row1, owner in self._occ[cb]:
+                    if owner == name:
+                        spans.append(RowSpan(channel=cb[0], bank=cb[1],
+                                             row0=row0, rows=row1 - row0))
+            new = dataclasses.replace(old, spans=tuple(spans))
+            self.placements[name] = new
+            # a moved placement's rows must be physically rewritten at the
+            # new addresses — the owner restages lazily via move_listeners,
+            # and that traffic is real DRAM-write cost the stats must show
+            # (Placement.staged keeps its one-time-at-placement meaning,
+            # which the program/oracle reconciliations depend on)
+            self.restaged_bits += old.staged.host_bits_written
+            for fn in self.move_listeners:
+                fn(name, old, new)
+        self.compactions += 1
+        self.moved_placements += len(moved_names)
+        return {"moved": len(moved_names), "freed_gaps": gap_rows}
 
     def touch(self, name: str) -> None:
         """LRU bump on execution (the engine calls this per GeMV launch)."""

@@ -167,8 +167,19 @@ def simulated_wave_time(report, model: DDR4Model = DDR4_2400) -> float:
     matched geometry and dense activation bits the two are equal (tested).
     Also accepts a `BatchReport` — its `wave_max` entries already sum the B
     per-request command streams that time-share each bank, so the same
-    serialization math prices the shared-wave batch.
+    serialization math prices the shared-wave batch — and a fused
+    `engine.ProgramReport`, whose `wave_max` entries are the EXECUTED
+    cross-layer fused waves (each bound by its slowest member tile, which
+    may belong to any layer sharing the wave); `price_program` reconciles
+    its bank term against exactly these counts via `executed_wave_ops`.
+    A LAYER-MAJOR run's ProgramReport carries no fused-wave counts and is
+    rejected (its serialization lives per layer in `reports[l].wave_max`)
+    rather than silently priced as zero seconds.
     """
+    if getattr(report, "fused", None) is False:
+        raise ValueError(
+            "layer-major ProgramReports have no fused-wave counts; price "
+            "each reports[l].wave_max, or run the program wave-major")
     return sum(c.pud_ops for c in report.wave_max) * model.t_op
 
 
@@ -362,7 +373,8 @@ class ProgramCost:
 
 def price_program(costs, sched: ProgramSchedule, batch: int = 1,
                   geom: PudGeometry = PudGeometry(),
-                  model: DDR4Model = DDR4_2400) -> ProgramCost:
+                  model: DDR4Model = DDR4_2400,
+                  executed_wave_ops=None) -> ProgramCost:
     """Price one decode step of a compiled program of resident GeMVs.
 
     costs: (L,) per-layer analytic `GemvCost` (single-pass, e.g.
@@ -376,6 +388,13 @@ def price_program(costs, sched: ProgramSchedule, batch: int = 1,
     `sequential` baseline re-prices each layer as an isolated
     `price_gemv_batched` launch (staging included) for the residency
     speedup the nightly floor guards.
+
+    `executed_wave_ops` — (waves,) PUD op counts per EXECUTED fused wave
+    (the per-wave maxima of a wave-major simulator run, B lanes already
+    summed; `engine.ProgramReport.executed_wave_ops`) — replaces the
+    analytic bank-serialization estimate with the measurement, after
+    checking that execution ran exactly the waves this schedule fused. At
+    dense activation bits and non-ragged grids the two are equal (tested).
     """
     costs = list(costs)
     if len(costs) != sched.layers:
@@ -389,7 +408,16 @@ def price_program(costs, sched: ProgramSchedule, batch: int = 1,
     for s in sched.slots:
         wave_ops[s.wave] = max(wave_ops.get(s.wave, 0), ops[s.layer])
         chan_ops[s.channel] += ops[s.layer]
-    t_bank = batch * sum(wave_ops.values()) * model.t_op
+    if executed_wave_ops is not None:
+        executed_wave_ops = list(executed_wave_ops)
+        if len(executed_wave_ops) != sched.waves:
+            raise ValueError(
+                f"execution ran {len(executed_wave_ops)} fused waves for a "
+                f"{sched.waves}-wave schedule — the executed program does "
+                f"not match the schedule being priced")
+        t_bank = float(sum(executed_wave_ops)) * model.t_op
+    else:
+        t_bank = batch * sum(wave_ops.values()) * model.t_op
     t_bus = batch * max(chan_ops) * model.t_cmd if sched.slots else 0.0
     t_compute = max(t_bank, t_bus)
     t_aggregate = batch * sum(c.aggregate_bits for c in costs) / 8 \

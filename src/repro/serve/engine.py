@@ -165,22 +165,34 @@ class ServeEngine:
         # decode order: layer-major (stage, stack index), leaves within
         leaves.sort(key=lambda e: (e[0], e[1]))
         names = []
-        try:
-            for stage, idx, leaf, bw in leaves:
+
+        def place(pending):
+            for stage, idx, leaf, bw in pending:
                 name = f"{stage}/{leaf}" + (f"#{idx}" if idx >= 0 else "")
                 self.mvdram.register_packed(name, bw, a_spec=a_spec)
                 names.append(name)
+
+        try:
+            try:
+                place(leaves)
+            except CapacityError:
+                # first-fit gaps from earlier eviction churn may add up to
+                # the rows we need without a contiguous run anywhere:
+                # defragment the pool (moved layers restage lazily) and
+                # retry the remaining placements once
+                self.mvdram.pool.compact()
+                place(leaves[len(names):])
         except CapacityError as e:
-            # the model does not fit the pool: roll the partial residency
-            # back (silent LRU churn would evict the layers we just
-            # placed and make compile fail anyway) and serve through the
-            # jit path without a resident decode program
+            # the model genuinely does not fit the pool: roll the partial
+            # residency back (silent LRU churn would evict the layers we
+            # just placed and make compile fail anyway) and serve through
+            # the jit path without a resident decode program
             import warnings
             for name in names:
                 if self.mvdram.pool.is_resident(name):
                     self.mvdram.evict(name)
             warnings.warn(
-                f"model does not fit the DramPool "
+                f"model does not fit the DramPool even after compaction "
                 f"({len(names)}/{len(leaves)} linears placed before "
                 f"capacity ran out); serving without a resident decode "
                 f"program. {e}", RuntimeWarning, stacklevel=2)

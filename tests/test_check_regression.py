@@ -1,0 +1,146 @@
+"""Unit tests for the bench-regression comparator (benchmarks/
+check_regression.py): the >max-drop PR gate against the committed baseline
+and the nightly row manifest that replaced the per-row workflow greps."""
+import json
+
+import pytest
+
+from benchmarks.check_regression import (check_drop, check_errors,
+                                         check_required, load_doc, main,
+                                         merge_best, read_manifest,
+                                         rows_by_name)
+
+
+def _doc(rows, errors=()):
+    return {"schema": 1, "suite": "sim_bench",
+            "rows": [{"name": n, "value": v, "derived": ""}
+                     for n, v in rows.items()],
+            "errors": list(errors)}
+
+
+BASE = _doc({"sim.wave_speedup_x": 8.0, "sim.batch_amortization_x": 4.0,
+             "sim.fused_wave_speedup_x": 2.0,
+             "sim.wave_banked_ms": 9.0})       # _ms rows are NOT gated
+
+
+def test_drop_gate_passes_within_tolerance():
+    new = _doc({"sim.wave_speedup_x": 6.2,      # −22.5% < 25% drop: OK
+                "sim.batch_amortization_x": 4.5,
+                "sim.fused_wave_speedup_x": 2.0,
+                "sim.wave_banked_ms": 100.0,    # wall-clock rows ungated
+                "sim.new_row_x": 0.1})          # new rows pass freely
+    assert check_drop(merge_best([new]), BASE, 0.25) == []
+
+
+def test_drop_gate_fails_below_floor():
+    new = _doc({"sim.wave_speedup_x": 5.9,      # −26% — below the floor
+                "sim.batch_amortization_x": 4.0,
+                "sim.fused_wave_speedup_x": 2.0})
+    failures = check_drop(merge_best([new]), BASE, 0.25)
+    assert len(failures) == 1
+    assert "sim.wave_speedup_x" in failures[0]
+    assert "floor 6" in failures[0]
+
+
+def test_drop_gate_fails_on_missing_gated_row():
+    new = _doc({"sim.wave_speedup_x": 8.0,
+                "sim.batch_amortization_x": 4.0})  # fused row vanished
+    failures = check_drop(merge_best([new]), BASE, 0.25)
+    assert len(failures) == 1 and "missing" in failures[0]
+    assert "sim.fused_wave_speedup_x" in failures[0]
+
+
+def test_multi_run_gate_takes_per_row_best():
+    """A contention-polluted run must not fail the gate when a second
+    independent run measured the true ratio — gated on the per-row MAX."""
+    slow = _doc({"sim.wave_speedup_x": 4.0,      # bandwidth-contended run
+                 "sim.batch_amortization_x": 4.2,
+                 "sim.fused_wave_speedup_x": 1.4})
+    good = _doc({"sim.wave_speedup_x": 7.9,
+                 "sim.batch_amortization_x": 3.1,
+                 "sim.fused_wave_speedup_x": 2.1})
+    merged = merge_best([slow, good])
+    assert merged["sim.wave_speedup_x"] == 7.9
+    assert merged["sim.batch_amortization_x"] == 4.2
+    assert check_drop(merged, BASE, 0.25) == []
+    # slow in EVERY run is a real regression
+    assert check_drop(merge_best([slow, slow]), BASE, 0.25)
+
+
+def test_recorded_bench_errors_fail():
+    doc = _doc({"sim.wave_speedup_x": 8.0},
+               errors=[{"bench": "sim_wave", "error": "AssertionError"}])
+    assert check_errors(doc, "new.json")
+    assert check_errors(_doc({}), "new.json") == []
+
+
+def test_required_rows_and_manifest(tmp_path):
+    manifest = tmp_path / "rows.txt"
+    manifest.write_text(
+        "# comment line\n"
+        "sim.wave_speedup_x   # trailing comment\n"
+        "\n"
+        "sim.fused_wave_speedup_x\n")
+    names = read_manifest(str(manifest))
+    assert names == ["sim.wave_speedup_x", "sim.fused_wave_speedup_x"]
+    ok = _doc({"sim.wave_speedup_x": 8.0, "sim.fused_wave_speedup_x": 2.0})
+    assert check_required(rows_by_name(ok), names) == []
+    missing = check_required(
+        rows_by_name(_doc({"sim.wave_speedup_x": 8.0})), names)
+    assert len(missing) == 1 and "sim.fused_wave_speedup_x" in missing[0]
+    bad = check_required(rows_by_name(
+        _doc({"sim.wave_speedup_x": 0.0, "sim.fused_wave_speedup_x": 2.0})),
+        names)
+    assert len(bad) == 1 and "non-positive" in bad[0]
+
+
+def test_committed_manifest_matches_bench_suite():
+    """Every row in the committed manifest must be one sim_bench emits —
+    a renamed bench row has to update the manifest in the same PR."""
+    import benchmarks.sim_bench as sb
+    names = read_manifest("benchmarks/bench_rows.txt")
+    assert names, "manifest is empty"
+    src = open(sb.__file__).read()
+    for name in names:
+        assert f'"{name}"' in src, f"manifest row {name!r} not emitted"
+
+
+def test_main_end_to_end(tmp_path):
+    new_p = tmp_path / "new.json"
+    base_p = tmp_path / "base.json"
+    man_p = tmp_path / "rows.txt"
+    base_p.write_text(json.dumps(BASE))
+    man_p.write_text("sim.wave_speedup_x\n")
+    new_p.write_text(json.dumps(_doc(
+        {"sim.wave_speedup_x": 7.0, "sim.batch_amortization_x": 3.5,
+         "sim.fused_wave_speedup_x": 1.9})))
+    assert main([str(new_p), "--baseline", str(base_p),
+                 "--require-rows", str(man_p)]) == 0
+    # a >25% drop flips the exit status
+    slow_p = tmp_path / "slow.json"
+    slow_p.write_text(json.dumps(_doc(
+        {"sim.wave_speedup_x": 1.0, "sim.batch_amortization_x": 3.5,
+         "sim.fused_wave_speedup_x": 1.9})))
+    assert main([str(slow_p), "--baseline", str(base_p)]) == 1
+    # ...unless a second independent run file carried the healthy number
+    assert main([str(slow_p), str(new_p), "--baseline", str(base_p)]) == 0
+    new_p = slow_p
+    # --max-drop is honored (75% tolerance lets the same run pass...)
+    assert main([str(new_p), "--baseline", str(base_p),
+                 "--max-drop", "0.9"]) == 0
+    # ...and a missing manifest row fails regardless of the gate
+    man_p.write_text("sim.wave_speedup_x\nsim.resident_amortization_x\n")
+    assert main([str(new_p), "--require-rows", str(man_p)]) == 1
+    with pytest.raises(SystemExit):
+        main([str(new_p)])               # nothing to check
+    with pytest.raises(SystemExit):
+        main([str(new_p), "--baseline", str(base_p), "--max-drop", "1.5"])
+
+
+def test_load_doc_rejects_non_bench_json(tmp_path):
+    p = tmp_path / "x.json"
+    p.write_text(json.dumps({"hello": 1}))
+    with pytest.raises(ValueError, match="no 'rows' key"):
+        load_doc(str(p))
+    doc = _doc({"a_x": 1.0})
+    assert rows_by_name(doc) == {"a_x": 1.0}

@@ -32,8 +32,11 @@ def test_scan_multiplies_by_trip_count():
     assert res["flops"] >= trips * one_dot
     assert res["flops"] < trips * one_dot * 1.5   # + elementwise slack
     assert res["unresolved_loops"] == []
-    # raw cost_analysis counts the body once — the bug we work around
-    raw = c.cost_analysis()["flops"]
+    # raw cost_analysis counts the body once — the bug we work around.
+    # jax < ~0.4.34 returns a one-element list of dicts, newer jax the
+    # dict itself; accept both so the pinned version range stays green
+    ca = c.cost_analysis()
+    raw = (ca[0] if isinstance(ca, (list, tuple)) else ca)["flops"]
     assert raw < res["flops"] / 2
 
 

@@ -244,6 +244,148 @@ def test_serve_capacity_overflow_falls_back_without_program(rng):
     assert out.shape == (1, 7)
 
 
+def test_pool_compact_reclaims_first_fit_gaps():
+    """Eviction churn leaves gaps first-fit cannot use; compact() slides
+    spans down, rebuilds the moved placements, and notifies listeners."""
+    one = dataclasses.replace(TINY, channels=1, banks_per_channel=1)
+    pool = DramPool(one, compute_reserve=10)      # 54 resident rows
+    rows = tile_resident_rows(4)                  # 10 rows per block
+    for name in ("a", "b", "c", "d", "e"):
+        pool.place(name, [4], 1)                  # rows 0..50, 4 free
+    pool.evict("b")
+    pool.evict("d")                               # free: [10,20)+[30,40)+[50,54)
+    assert pool.free_rows == 24
+    # 24 free rows in total, but no contiguous run of 18
+    with pytest.raises(CapacityError, match="cannot place"):
+        pool.place("big", [8], 1, on_full="raise")
+    moves = []
+    pool.move_listeners.append(lambda n, old, new: moves.append((n, old, new)))
+    stats = pool.compact()
+    assert stats["moved"] == 2 and stats["freed_gaps"] == 20
+    assert sorted(n for n, _o, _n in moves) == ["c", "e"]   # a never moves
+    for n, old, new in moves:
+        assert new.spans[0].row0 < old.spans[0].row0
+        assert pool.placements[n] is new
+    # occupancy is now contiguous from 0; the 18-row block fits
+    assert pool.placements["a"].spans[0].row0 == 0
+    assert pool.placements["c"].spans[0].row0 == rows
+    assert pool.placements["e"].spans[0].row0 == 2 * rows
+    big = pool.place("big", [8], 1, on_full="raise")
+    assert big.resident_rows == tile_resident_rows(8)
+    assert pool.stats()["compactions"] == 1
+    assert pool.stats()["moved_placements"] == 2
+
+
+def test_compact_packs_around_reserved_pins():
+    """reserve() pins fix ABSOLUTE row addresses (possibly coordinated
+    with state the pool cannot see) — compaction must never move them,
+    only pack pool-driven placements around them."""
+    one = dataclasses.replace(TINY, channels=1, banks_per_channel=1)
+    pool = DramPool(one, compute_reserve=10)      # 54 resident rows
+    pin = pool.reserve("pin", [RowSpan(channel=0, bank=0, row0=14,
+                                       rows=10)])
+    a = pool.place("a", [4], 1)                   # 10 rows at 0
+    b = pool.place("b", [4], 1)                   # 10 rows at 24
+    pool.evict("a")                               # gap [0,10) below the pin
+    moves = []
+    pool.move_listeners.append(lambda n, o, new: moves.append(n))
+    stats = pool.compact()
+    assert pool.placements["pin"] is pin          # untouched, not rebuilt
+    assert pin.spans[0].row0 == 14
+    assert moves == ["b"]
+    assert stats["moved"] == 1 and stats["freed_gaps"] == 14
+    # b (10 rows) fits entirely below the pin: [0, 10) with the pin at 14
+    assert pool.placements["b"].spans[0].row0 == 0
+    # a fresh 10-row block now goes after the pin (rows 10-13 too narrow)
+    c = pool.place("c", [4], 1)
+    assert c.spans[0].row0 == 24
+
+
+def test_engine_restages_moved_placements_after_compact(rng):
+    """Compaction physically moves resident rows: the engine must drop the
+    staged BankArrays of moved layers (restaged lazily) and keep serving
+    bit-identically; compiled programs re-index the new staging."""
+    one = dataclasses.replace(TINY, channels=1, banks_per_channel=1)
+    eng = MVDRAMEngine(geom=one, pool=DramPool(one, compute_reserve=10),
+                       on_full="raise")
+    ha = _register(eng, rng, "a", 4, 2)
+    hb = _register(eng, rng, "b", 4, 2)
+    prog = eng.compile([ha, hb])
+    x = [jnp.asarray(rng.normal(size=(2, 4)), jnp.float32)] * 2
+    outs0, _ = prog.run(x)
+    assert eng.residency_stats()["staged_layers"] == 2
+    eng.evict("a")
+    eng.pool.compact()                            # moves b down to row 0
+    assert hb.placement.spans[0].row0 == 0
+    assert eng.residency_stats()["staged_layers"] == 0   # b's rows dropped
+    # the physical rewrite of b's moved rows is visible DRAM-write cost
+    assert eng.pool.stats()["restaged_bits"] \
+        == hb.placement.staged.host_bits_written > 0
+    # b still serves bit-identically against the restaged rows
+    out_b, rep_b = eng.gemv(hb, x[1], backend=SIM)
+    assert rep_b.resident
+    np.testing.assert_array_equal(np.asarray(out_b), np.asarray(outs0[1]))
+
+
+def test_serve_engine_compacts_pool_on_capacity_error():
+    """A fragmented pool that rejects the model's last linear on a
+    contiguity (not capacity) shortfall is compacted and retried: the
+    resident decode program survives instead of falling back."""
+    import dataclasses as dc
+    import jax
+    from repro.configs import tiny_config
+    from repro.models.model import param_defs
+    from repro.models.params import init_params
+    from repro.serve.engine import ServeEngine
+    from repro.serve import engine as serve_engine_mod
+
+    cfg = dc.replace(tiny_config("llama2-7b"), dtype="float32",
+                     weight_bits=4)
+    params = init_params(param_defs(cfg), jax.random.PRNGKey(0))
+    one = dataclasses.replace(TINY, channels=1, banks_per_channel=1,
+                              subarrays_per_bank=512)
+    orig = serve_engine_mod.MVDRAMEngine
+
+    # pass 1: measure the model's exact per-bank row demand D
+    try:
+        serve_engine_mod.MVDRAMEngine = lambda **kw: orig(
+            geom=one, pool=DramPool(one, compute_reserve=10),
+            on_full="raise")
+        probe = ServeEngine(cfg, params, max_seq=32, quantized=True,
+                            act_bits=4)
+        demand = probe.mvdram.pool.used_rows
+        assert probe.decode_program is not None
+
+        # pass 2: leave a MOVABLE junk placement behind an evicted gap of
+        # 4 rows — too narrow for any model linear (each needs ≥ 2 + 2·16
+        # rows) — with capacity sized so the tail holds D − 4 rows: the
+        # LAST linear fails on contiguity, compact() slides the junk down
+        # over the gap, the tail grows to D, and placement succeeds.
+        gap, K = tile_resident_rows(1), tile_resident_rows(4)
+
+        def fragmented(**kw):
+            cap = gap + K + (demand - gap)
+            reserve = one.bank_rows - cap
+            assert reserve > 0
+            pool = DramPool(one, compute_reserve=reserve)
+            pool.place("junk_gap", [1], 1)        # rows [0, 4)
+            pool.place("junk", [4], 1)            # rows [4, 4+K)
+            pool.evict("junk_gap")                # unusable 4-row gap
+            return orig(geom=one, pool=pool, on_full="raise")
+
+        serve_engine_mod.MVDRAMEngine = fragmented
+        eng = ServeEngine(cfg, params, max_seq=32, quantized=True,
+                          act_bits=4)
+    finally:
+        serve_engine_mod.MVDRAMEngine = orig
+    assert eng.decode_program is not None          # rescued by compaction
+    assert eng.mvdram.pool.stats()["compactions"] == 1
+    assert eng.mvdram.pool.free_rows == 0
+    prompts = jnp.zeros((1, 4), jnp.int32)
+    out = eng.generate(prompts, max_new=3)
+    assert out.shape == (1, 7)
+
+
 def test_pool_staged_reconciles_with_simulator_preload(rng):
     """Placement-time staging accounting == the simulator's per-tile preload
     (summed) — the same (2 + 2·n_c)·cols bits per tile, exactly."""

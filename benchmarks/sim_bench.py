@@ -210,12 +210,14 @@ def sim_batched_wave_sharing(emit):
                   f"amortization {amortization:.2f}x below the 2x floor")
 
 
-def _resident_block(seed: int = 5, B: int = 2, q_b: int = 4, p_b: int = 2):
+def _resident_block(seed: int = 5, B: int = 2, q_b: int = 4, p_b: int = 2,
+                    fault_model=None, fault_policy=None):
     """The 4-layer q4/p2 B=2 resident block (q/k/v-style group of three
-    512→256 linears + a 256→512 down projection) shared by the resident
-    and fused-execution benchmarks."""
+    512→256 linears + a 256→512 down projection) shared by the resident,
+    fused-execution and fault-injection benchmarks."""
     rng = np.random.default_rng(seed)
-    eng = MVDRAMEngine(geom=BANKED)
+    eng = MVDRAMEngine(geom=BANKED, fault_model=fault_model,
+                       fault_policy=fault_policy)
     shapes = [(N, M), (N, M), (N, M), (M, N)]
     hs = []
     for i, (n, m) in enumerate(shapes):
@@ -340,6 +342,90 @@ def sim_fused_program(emit):
                   f"fused speedup {speedup:.2f}x below the 1.3x floor")
 
 
+def sim_fault_injection(emit):
+    """Fault-injected PUD (ISSUE 6): seeded MAJX fault injection under the
+    ABFT checksum verifier. Three rows: (1) detection coverage at a fixed
+    transient BER over resident decode steps of the 4-layer block — every
+    injection is a single-bit column flip, so the GeMV-linearity checksum
+    must catch 100% (the ≥99% acceptance floor is a hard assert); (2) the
+    priced retry overhead — faulty-step `t_total` (executed reconciliation
+    including the `t_retry` term) over the clean step's; (3) degraded-mode
+    throughput — a persistent fault storm degrades a linear to the host
+    `jnp` backend through quarantine + fallback budgets, and the degraded
+    step (still serving, correct results) is timed against the healthy
+    simulated step."""
+    from repro.core import backends
+    from repro.core.pud.faults import FaultModel, FaultPolicy
+
+    B, p_b = 2, 2
+    # ① + ② transient BER on the resident block (~2048 (request, tile)
+    # cells per decode step)
+    fm = FaultModel(transient_ber=2e-3, seed=17)
+    eng_f, _hs_f, prog_f, X = _resident_block(
+        B=B, p_b=p_b, fault_model=fm,
+        fault_policy=FaultPolicy(max_wave_retries=4, degrade_after=10**6))
+    eng_c, _hs_c, prog_c, _ = _resident_block(B=B, p_b=p_b)
+    outs_c, rep_c = prog_c.run(X)
+    corrupted = detected = 0
+    rep_retry = None
+    for _ in range(12):
+        outs, rep = prog_f.run(X)
+        tr = rep.fault
+        corrupted += tr.corrupted
+        detected += tr.detected
+        if tr.retries and not tr.unresolved:
+            rep_retry = rep
+            for o, oc in zip(outs, outs_c):
+                assert np.array_equal(np.asarray(o), np.asarray(oc)), \
+                    "retried decode step diverged from the clean block"
+    assert corrupted > 0, "transient BER never fired — raise the cell count"
+    coverage = detected / corrupted
+    emit("sim.fault_detection_coverage", coverage,
+         f"corrupted={corrupted} detected={detected} ber=2e-3 "
+         f"(single-bit flips: coverage is exact)")
+    assert coverage >= 0.99, \
+        f"ABFT coverage {coverage:.4f} below the 0.99 acceptance floor"
+    assert rep_retry is not None, "no fully-retried step to price"
+    cost_c = eng_c.price_program(prog_c, batch=B, executed=rep_c)
+    cost_f = eng_f.price_program(prog_f, batch=B, executed=rep_retry)
+    assert cost_f.t_retry > 0.0
+    assert abs((cost_f.t_total - cost_f.t_retry) - cost_c.t_total) \
+        <= 1e-9 * cost_c.t_total, "retry term failed to reconcile"
+    overhead = cost_f.t_total / cost_c.t_total
+    emit("sim.fault_retry_overhead_x", overhead,
+         f"retry_waves={cost_f.retry_waves} t_retry_us="
+         f"{cost_f.t_retry * 1e6:.1f}")
+
+    # ③ persistent fault storm → quarantine → host degradation, still serving
+    storm = FaultModel(weak_cell_rate=0.05, weak_flip_prob=1.0, seed=23)
+    pol = FaultPolicy(max_wave_retries=1, quarantine_after=1, degrade_after=1)
+    eng_s = MVDRAMEngine(geom=BANKED, fault_model=storm, fault_policy=pol)
+    rng = np.random.default_rng(29)
+    w = jnp.asarray(rng.normal(size=(N, M)), jnp.float32)
+    x = jnp.asarray(rng.normal(size=(B, N)), jnp.float32)
+    h_s = eng_s.register("w", w, QuantSpec(bits=Q), a_spec=QuantSpec(bits=p_b))
+    eng_s.gemv(h_s, x, backend=backends.SIM)        # trips the full ladder
+    assert eng_s.is_degraded(h_s), "fault storm failed to degrade the linear"
+    st = eng_s.residency_stats()
+    eng_h = MVDRAMEngine(geom=BANKED)
+    h_h = eng_h.register("w", w, QuantSpec(bits=Q), a_spec=QuantSpec(bits=p_b))
+    eng_h.gemv(h_h, x, backend=backends.SIM)        # warm caches
+    t_sim, (out_sim, _r) = _best_of(
+        lambda: eng_h.gemv(h_h, x, backend=backends.SIM))
+    eng_s.gemv(h_s, x, backend=backends.SIM)        # warm the jnp route
+    t_deg, (out_deg, rep_deg) = _best_of(
+        lambda: eng_s.gemv(h_s, x, backend=backends.SIM))
+    assert rep_deg is None                          # host route, no sim stream
+    np.testing.assert_allclose(np.asarray(out_sim), np.asarray(out_deg),
+                               rtol=2e-5, atol=1e-5)
+    ratio = t_sim / t_deg
+    emit("sim.fault_degraded_throughput_x", ratio,
+         f"degraded (host jnp) step vs healthy simulated step; "
+         f"quarantined_banks={st['quarantined_banks']} "
+         f"fallbacks={st['fault_host_fallbacks']} still_correct=True")
+    assert ratio > 0.0
+
+
 def kernel_dots_issued(emit):
     from repro.kernels.bitplane_gemv import ops as bp
     from repro.kernels.bitplane_gemv.kernel import dots_per_tile
@@ -373,7 +459,7 @@ def kernel_dots_issued(emit):
 
 ALL = [sim_vectorized_vs_naive, sim_wave_vs_sequential,
        sim_batched_wave_sharing, sim_resident_decode, sim_fused_program,
-       kernel_dots_issued]
+       sim_fault_injection, kernel_dots_issued]
 
 # skipped under --smoke: Pallas interpret-mode timing is the long pole and
 # emits no gated ratio rows

@@ -129,6 +129,11 @@ class SimBackend(Backend):
             raise ValueError(
                 f"sim backend takes a (N,) vector or a (B, N) lane "
                 f"batch, got shape {tuple(a.shape)}")
+        if engine.is_degraded(handle):
+            # the fault-recovery ladder demoted this linear to the host
+            # oracle (persistent bank faults past the retry/quarantine
+            # budget) — serve it from jnp, no simulated command stream
+            return jnp.asarray(JNP.gemv(engine, handle, a)), None
         resident_eligible = (a.ndim == 2 and not naive
                              and wave is not False)
         staged = engine.staged_for(handle) if resident_eligible else None

@@ -39,15 +39,17 @@ import math
 from typing import Optional, Sequence, Union
 
 import jax
+import numpy as np
 
 from . import backends as _backends
 from .backends import Backend
 from .bitplane import BitplaneWeights, from_quantized, to_quantized
+from .pud.faults import FaultModel, FaultPolicy, FaultTrace
 from .pud.gemv import (CommandTemplates, GemvCost, PudGeometry, StagedWaves,
                        build_templates, conventional_pud_cost,
                        execute_program, mvdram_gemv_batched,
                        mvdram_gemv_cost, stage_matrix, stage_program)
-from .pud.residency import DramPool, Placement
+from .pud.residency import CapacityError, DramPool, Placement
 from .pud.schedule import (ProgramSchedule, schedule_batch, schedule_program,
                            schedule_tiles)
 from .pud.timing import (DDR4_2400, CpuBaseline, DDR4Model, GpuBaseline,
@@ -142,13 +144,19 @@ class ProgramReport:
     """
 
     def __init__(self, reports=None, builder=None, fused: bool = False,
-                 waves: int = 0, wave_max_arr=None, batch: int = 1):
+                 waves: int = 0, wave_max_arr=None, batch: int = 1,
+                 retry_wave_ops=(), fault: Optional[FaultTrace] = None):
         self._reports = reports
         self._builder = builder
         self.fused = fused
         self.waves = waves
         self.batch = batch          # lane batch the step executed
         self._wave_max_arr = wave_max_arr
+        # fault-retry waves the step EXECUTED beyond the schedule (ABFT
+        # re-runs of corrupt wave segments, each entry one wave's B-summed
+        # PUD op bill) — `price_program(..., executed=...)` reconciles them
+        self.retry_wave_ops = tuple(retry_wave_ops)
+        self.fault = fault          # merged FaultTrace (None = faults off)
 
     @property
     def reports(self) -> tuple:
@@ -287,10 +295,18 @@ class GemvProgram:
                 outs.append(jnp.asarray(out[0] if squeeze else out))
                 reports.append(rep)
             self.steps += 1
+            fault = None
+            if any(r.fault is not None for r in reports):
+                fault = FaultTrace()
+                for r in reports:
+                    if r.fault is not None:
+                        fault.merge(r.fault)
             return outs, ProgramReport(
                 reports=tuple(reports), fused=False,
                 waves=sum(r.waves for r in reports),
-                batch=reports[0].batch if reports else 1)
+                batch=reports[0].batch if reports else 1,
+                retry_wave_ops=fault.retry_wave_ops if fault else (),
+                fault=fault)
 
         xs, squeezes = [], []
         for h, x in zip(self.handles, activations):
@@ -310,20 +326,37 @@ class GemvProgram:
             # layer, and the plan must follow it
             self._fused = stage_program(staged, self.sched)
             self._fused_staged = staged
+            if self.engine._fault_session is not None:
+                # fault keys track the CURRENT pool homes, not the banks
+                # the schedule was compiled against — a quarantine restage
+                # moved the layer, and injection must follow it
+                self._fused.bank_keys = np.asarray(
+                    [self.handles[s.layer].placement.banks[s.tile]
+                     for s in self.sched.slots], dtype=np.int64)
         aqs = [quantize_activations(x, h.a_spec)
                for h, x in zip(self.handles, xs)]
         res = execute_program(
             self._fused, aqs, [h.wq for h in self.handles],
             [h.templates for h in self.handles],
-            sparsity=self.engine.sparsity)
+            sparsity=self.engine.sparsity,
+            fault=self.engine._fault_session,
+            max_retries=self.engine.fault_policy.max_wave_retries)
         for h in self.handles:
             self.engine.pool.touch(h.name)
         report = ProgramReport(
             builder=_resident_report_builder(staged, res, self.engine.geom),
             fused=True, waves=res.waves, wave_max_arr=res.wave_max,
-            batch=xs[0].shape[0] if xs else 1)
-        outs = [jnp.asarray(o[0] if sq else o)
-                for o, sq in zip(res.outs, squeezes)]
+            batch=xs[0].shape[0] if xs else 1,
+            retry_wave_ops=res.retry_wave_ops, fault=res.fault)
+        outs = [jnp.asarray(o) for o in res.outs]
+        if res.fault is not None:
+            self.engine._record_fault(res.fault)
+            if res.fault.unresolved:
+                # cells still corrupt past the retry budget: quarantine the
+                # failing banks and host-recompute the affected layers
+                outs = self.engine._recover(self.handles, xs, outs,
+                                            res.fault)
+        outs = [o[0] if sq else o for o, sq in zip(outs, squeezes)]
         self.steps += 1
         return outs, report
 
@@ -364,7 +397,9 @@ class MVDRAMEngine:
                  gpu: GpuBaseline = GpuBaseline(),
                  sparsity: bool = True,
                  pool: Optional[DramPool] = None,
-                 on_full: str = "evict"):
+                 on_full: str = "evict",
+                 fault_model: Optional[FaultModel] = None,
+                 fault_policy: Optional[FaultPolicy] = None):
         self.geom = geom
         self.timing = timing
         self.cpu = cpu
@@ -372,6 +407,22 @@ class MVDRAMEngine:
         self.sparsity = sparsity
         self.pool = pool if pool is not None else DramPool(geom)
         self.on_full = on_full
+        # fault injection + recovery ladder: FaultModel.none() yields NO
+        # session, so the default engine takes the exact pre-fault paths
+        self.fault_model = (fault_model if fault_model is not None
+                            else FaultModel.none())
+        self.fault_policy = (fault_policy if fault_policy is not None
+                             else FaultPolicy())
+        self._fault_session = self.fault_model.session()
+        self._bank_strikes: dict = {}     # (channel, bank) -> unresolved hits
+        self._fallback_counts: dict = {}  # name -> host recomputations
+        self._degraded: set = set()       # names served by the host backend
+        self.fault_corrupted = 0
+        self.fault_detected = 0
+        self.fault_retries = 0
+        self.fault_host_fallbacks = 0
+        self.fault_quarantines = 0
+        self.fault_restages = 0
         self.handles: dict[str, GemvHandle] = {}
         self._staged: dict[str, StagedWaves] = {}
         self._leaf_names: dict[tuple, str] = {}  # serving leaf id → handle
@@ -489,8 +540,18 @@ class MVDRAMEngine:
                 or self.pool.placements.get(h.name) is not h.placement):
             return None
         if h.name not in self._staged:
-            self._staged[h.name] = stage_matrix(
-                h.wq, h.a_spec.bits, geom=self.geom)
+            st = stage_matrix(h.wq, h.a_spec.bits, geom=self.geom)
+            if self._fault_session is not None:
+                # fault keys must follow the POOL's per-tile homes — the
+                # staging schedule's default rotation only matches a fresh
+                # pool, and quarantine exists precisely to MOVE a matrix
+                # off its weak banks on restage
+                banks = h.placement.banks
+                for g in st.groups:
+                    g.bank_keys = np.asarray(
+                        [banks[t] for t in g.tiles_idx], dtype=np.int64)
+                    g.bank.fault_keys = g.bank_keys
+            self._staged[h.name] = st
         return self._staged[h.name]
 
     # -- phase ②: execute (encode, execute, aggregate) ------------------------
@@ -523,13 +584,84 @@ class MVDRAMEngine:
                      staged: StagedWaves):
         """One resident lane-batched launch against already-staged rows —
         the single execution path shared by the sim backend and compiled
-        `GemvProgram` steps (zero weight re-staging)."""
+        `GemvProgram` steps (zero weight re-staging). With a fault session
+        active the launch ABFT-verifies each wave and retries corrupt
+        segments; cells still corrupt past the budget escalate through
+        `_recover` (quarantine / host recompute / degrade)."""
         aq = quantize_activations(x, handle.a_spec)
         out, report = mvdram_gemv_batched(
             aq, handle.wq, sparsity=self.sparsity, geom=self.geom,
-            templates=handle.templates, staged=staged)
+            templates=handle.templates, staged=staged,
+            fault=self._fault_session,
+            max_retries=self.fault_policy.max_wave_retries)
         self.pool.touch(handle.name)
+        if report.fault is not None:
+            self._record_fault(report.fault)
+            if report.fault.unresolved:
+                out = self._recover([handle], [x], [out], report.fault)[0]
         return out, report
+
+    # -- fault recovery (ABFT escalation ladder) ------------------------------
+
+    def is_degraded(self, handle: Union[GemvHandle, str]) -> bool:
+        """Has the fault-recovery ladder demoted this linear to the host
+        `jnp` backend? (`SimBackend.gemv` routes degraded handles there so
+        serving keeps answering under a fault storm.)"""
+        name = handle if isinstance(handle, str) else handle.name
+        return name in self._degraded
+
+    def _record_fault(self, trace: FaultTrace) -> None:
+        self.fault_corrupted += trace.corrupted
+        self.fault_detected += trace.detected
+        self.fault_retries += trace.retries
+
+    def _recover(self, handles, xs, outs, trace: FaultTrace) -> list:
+        """Escalate a launch's unresolved fault cells per `FaultPolicy`:
+        strike the failing banks — `quarantine_after` strikes quarantines
+        the bank in the pool and restages its evicted residents on healthy
+        banks — then recompute the corrupted layers' outputs on the host
+        `jnp` oracle (correct by construction). A layer host-recomputed
+        `degrade_after` times degrades permanently to the host backend."""
+        for cb in trace.unresolved_banks:
+            cb = (int(cb[0]), int(cb[1]))
+            self._bank_strikes[cb] = self._bank_strikes.get(cb, 0) + 1
+            if (self._bank_strikes[cb] >= self.fault_policy.quarantine_after
+                    and not self.pool.is_quarantined(*cb)):
+                victims = self.pool.quarantine_bank(*cb)
+                self.fault_quarantines += 1
+                for name in victims:
+                    self._restage_elsewhere(name)
+        outs = list(outs)
+        for layer in sorted({l for (_b, l, _t) in trace.unresolved}):
+            h = handles[layer]
+            outs[layer] = _backends.JNP.gemv(self, h, xs[layer])
+            self.fault_host_fallbacks += 1
+            n = self._fallback_counts.get(h.name, 0) + 1
+            self._fallback_counts[h.name] = n
+            if n >= self.fault_policy.degrade_after:
+                self._degraded.add(h.name)
+        return outs
+
+    def _restage_elsewhere(self, name: str) -> None:
+        """Re-place a resident that a bank quarantine evicted — onto the
+        surviving healthy banks, compacting once if fragmented. If the
+        rank is out of healthy capacity the layer degrades to the host
+        backend instead of failing the launch."""
+        h = self.handles.get(name)
+        if h is None:
+            return
+        chunk_rows, col_chunks = self._sim_grid(
+            h.weights.n, h.weights.m, h.weights.bits)
+        for attempt in range(2):
+            try:
+                h.placement = self.pool.place(
+                    name, chunk_rows, col_chunks, on_full=self.on_full)
+                self.fault_restages += 1
+                return
+            except CapacityError:
+                if attempt == 0:
+                    self.pool.compact()
+        self._degraded.add(name)
 
     # -- serving-side routing --------------------------------------------------
 
@@ -632,6 +764,7 @@ class MVDRAMEngine:
         cols = usable_cols if usable_cols is not None else \
             self.geom.subarray_cols
         executed_wave_ops = None
+        retry_wave_ops = None
         if executed is not None:
             if cols != self.geom.subarray_cols:
                 raise ValueError(
@@ -649,6 +782,9 @@ class MVDRAMEngine:
                     f"lane batch; pricing at batch={batch} would mix it "
                     f"with analytic terms at a different batch")
             executed_wave_ops = executed.executed_wave_ops
+            # ABFT fault-retry waves the step executed beyond the schedule
+            # reconcile as an explicit extra serialization term (t_retry)
+            retry_wave_ops = executed.retry_wave_ops or None
         costs = []
         for h in program.handles:
             p = h.plan
@@ -666,7 +802,8 @@ class MVDRAMEngine:
             sched = schedule_program(grids, self.geom, groups=program.groups)
         return price_program(costs, sched, batch=batch,
                              geom=self.geom, model=self.timing,
-                             executed_wave_ops=executed_wave_ops)
+                             executed_wave_ops=executed_wave_ops,
+                             retry_wave_ops=retry_wave_ops)
 
     # -- pricing (paper-faithful DDR4 numbers) --------------------------------
 
@@ -700,10 +837,20 @@ class MVDRAMEngine:
 
     def residency_stats(self) -> dict:
         """Pool capacity/eviction stats plus the engine's staged-layer
-        count — the serving layer surfaces this."""
+        count and the fault-recovery ladder's counters — the serving layer
+        surfaces this."""
         stats = self.pool.stats()
         stats["staged_layers"] = len(self._staged)
         stats["registered"] = len(self.handles)
+        stats["fault_corrupted"] = self.fault_corrupted
+        stats["fault_detected"] = self.fault_detected
+        stats["fault_retries"] = self.fault_retries
+        stats["fault_host_fallbacks"] = self.fault_host_fallbacks
+        stats["fault_quarantines"] = self.fault_quarantines
+        stats["fault_restages"] = self.fault_restages
+        stats["degraded_layers"] = sorted(self._degraded)
+        if self._fault_session is not None:
+            stats.update(self._fault_session.stats())
         return stats
 
 

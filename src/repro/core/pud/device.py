@@ -65,6 +65,11 @@ class Subarray:
         # calibrated columns; MVDRAM places operands on reliable columns only.
         self.reliable = (np.ones(cols, dtype=bool) if reliable_cols is None
                          else reliable_cols.astype(bool))
+        # Optional fault injection (faults.FaultSession): when set, every
+        # MAJX result may be corrupted per the session's model. `fault_key`
+        # is this subarray's (channel, bank) identity for weak-cell lookup.
+        self.fault_session = None
+        self.fault_key = (0, 0)
 
     # -- PUD primitives ------------------------------------------------------
 
@@ -78,10 +83,17 @@ class Subarray:
         activated rows. On non-reliable columns the analog outcome is
         undefined — modeled as unchanged (MVDRAM never reads them)."""
         x = len(rows)
-        assert x % 2 == 1 and x >= 3, "MAJX needs an odd row count >= 3"
+        if x % 2 != 1 or x < 3:
+            raise ValueError(f"MAJX needs an odd row count >= 3, got {x} "
+                             f"rows {list(rows)!r}")
         votes = self.data[rows].sum(axis=0)
         result = (votes > x // 2).astype(np.uint8)
         out = np.where(self.reliable, result, self.data[rows[0]])
+        if self.fault_session is not None:
+            flips = self.fault_session.flip_columns(self.cols,
+                                                    *self.fault_key)
+            # analog upsets only matter on columns MVDRAM trusts
+            out = out ^ (flips & self.reliable).astype(np.uint8)
         for r in rows:
             self.data[r] = out
         if x == 3:
@@ -94,7 +106,9 @@ class Subarray:
     # -- host (processor) access over the DDR data bus ------------------------
 
     def host_write_row(self, row: int, bits: np.ndarray) -> None:
-        assert bits.shape == (self.cols,)
+        if bits.shape != (self.cols,):
+            raise ValueError(f"host_write_row expects a ({self.cols},) row, "
+                             f"got shape {bits.shape}")
         self.data[row] = bits.astype(np.uint8)
         self.counts.host_bits_written += self.cols
 
@@ -168,6 +182,11 @@ class BankArray:
         self.shared = OpCounts()
         self.extra = np.zeros(lead + (tiles, len(_COUNT_FIELDS)),
                               dtype=np.int64)
+        # Optional fault injection: `fault_keys` is a (tiles, 2) array of
+        # (channel, bank) identities so each tile of the wave draws from its
+        # own bank's weak-cell map.
+        self.fault_session = None
+        self.fault_keys = None
 
     # -- broadcast PUD primitives (one command, all banks of the wave) -------
 
@@ -177,10 +196,17 @@ class BankArray:
 
     def majx(self, rows: list[int]) -> None:
         x = len(rows)
-        assert x % 2 == 1 and x >= 3, "MAJX needs an odd row count >= 3"
+        if x % 2 != 1 or x < 3:
+            raise ValueError(f"MAJX needs an odd row count >= 3, got {x} "
+                             f"rows {list(rows)!r}")
         votes = self.data[..., rows, :].sum(axis=-2)
         result = (votes > x // 2).astype(np.uint8)
         out = np.where(self.reliable, result, self.data[..., rows[0], :])
+        if self.fault_session is not None:
+            keys = (self.fault_keys if self.fault_keys is not None
+                    else [(0, 0)] * self.tiles)
+            flips = self.fault_session.flip_tiles(keys, self.cols)
+            out = out ^ (flips & self.reliable).astype(np.uint8)
         for r in rows:
             self.data[..., r, :] = out
         if x == 3:
@@ -196,7 +222,9 @@ class BankArray:
         """Broadcast one (cols,) row to every tile (constant rows); in batched
         mode the write also broadcasts across requests and is charged once —
         the physical row is loaded a single time."""
-        assert bits.shape == (self.cols,)
+        if bits.shape != (self.cols,):
+            raise ValueError(f"host_write_row expects a ({self.cols},) row, "
+                             f"got shape {bits.shape}")
         self.data[..., row, :] = bits.astype(np.uint8)
         self.shared.host_bits_written += self.cols
 
@@ -206,7 +234,10 @@ class BankArray:
         and its bus traffic is charged ONCE — this is the shared-wave
         RowCopy/write amortization."""
         rows_idx = np.asarray(rows_idx)
-        assert bits.shape == (self.tiles, rows_idx.shape[0], self.cols)
+        want = (self.tiles, rows_idx.shape[0], self.cols)
+        if bits.shape != want:
+            raise ValueError(f"host_write_rows expects a (tiles, n_rows, "
+                             f"cols) = {want} block, got shape {bits.shape}")
         self.data[..., rows_idx, :] = bits.astype(np.uint8)
         self.shared.host_bits_written += rows_idx.shape[0] * self.cols
 

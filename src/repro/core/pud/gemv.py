@@ -80,6 +80,7 @@ from ..quant import QuantizedTensor
 from .adder import (add_row_at_offset, add_rows_batched, adder_cost,
                     clear_accumulator, write_accumulator_wave)
 from .device import _COUNT_FIELDS, BankArray, OpCounts, Subarray
+from .faults import FaultSession, FaultTrace
 from .layout import (HorizontalLayout, VerticalLayout,
                      accumulator_width)
 from .schedule import (BatchSchedule, ProgramSchedule,  # noqa: F401 (re-export)
@@ -462,6 +463,10 @@ class BatchReport:
     # with `residency.Placement.staged` / the per-call oracle's preload.
     resident: bool = False
     staged: Optional[OpCounts] = None
+    # ABFT fault observability: None on fault-free launches; a `FaultTrace`
+    # (corrupted / detected / retries / unresolved cells) when a
+    # `faults.FaultSession` rode along.
+    fault: Optional[FaultTrace] = None
 
     @property
     def tiles(self) -> int:
@@ -696,6 +701,11 @@ class StagedGroup:
     m_subs: np.ndarray         # (T,) live outputs per tile
     flat_idx: np.ndarray       # (n_valid,) partials scatter indices
     valid_ravel: np.ndarray    # (T·m_per_tile,) bool gather mask
+    # ABFT checksum row per tile (paper-style GeMV linearity: the column
+    # sum of the resident rows is itself a weight row, so the expected
+    # accumulator COLUMN SUM is codes·checksum — one extra dot per tile).
+    checksum: np.ndarray = None       # int64 (T, n_c)
+    bank_keys: np.ndarray = None      # int64 (T, 2) (channel, bank) per tile
 
 
 @dataclasses.dataclass
@@ -788,11 +798,16 @@ def _stage_waves(w_u: np.ndarray, q: int, p: int, geom: PudGeometry,
             preload[tiles_idx] = bank.counts_matrix()
             bank.reset_counts()
             flat_idx = (chunks[:, None] * m + col_idx)[valid]  # (n_valid,)
+            bank_keys = np.asarray([(a.channel, a.bank) for a in group],
+                                   dtype=np.int64)
+            bank.fault_keys = bank_keys
             groups.append(StagedGroup(
                 lay=lay, bank=bank,
                 matrix_block=rows_block.astype(np.float32),
                 chunks=chunks, tiles_idx=tiles_idx, m_subs=m_subs,
-                flat_idx=flat_idx, valid_ravel=valid.ravel()))
+                flat_idx=flat_idx, valid_ravel=valid.ravel(),
+                checksum=rows_block.sum(axis=-1, dtype=np.int64),
+                bank_keys=bank_keys))
     return StagedWaves(n_chunks=sched.n_chunks, col_chunks=sched.col_chunks,
                        n=n, m=m, q=q, p=p, n_sub=n_sub, geom=geom,
                        m_per_tile=m_per_tile, slot_cols=slot_cols,
@@ -844,8 +859,78 @@ def _chunk_arrays_batched(a_u: np.ndarray, n: int, n_sub: int, p: int,
     return codes, popc, zeros, skipped, r_bits
 
 
+def _group_retry_ops(lay: HorizontalLayout,
+                     n_adds_all: np.ndarray) -> np.ndarray:
+    """Per-(request, tile) PUD ops of ONE re-execution of a staged group:
+    the 2·r clear RowCopies plus each offset's add template (RowCopy +
+    MAJ3 + MAJ5) times its popcount — the same static-template math the
+    first pass bills, so a retry is priced exactly like the wave it
+    repeats."""
+    p = n_adds_all.shape[-1]
+    per_add = np.asarray([adder_cost(lay.r - k).pud_ops for k in range(p)],
+                         dtype=np.int64)
+    return 2 * lay.r + (n_adds_all * per_add).sum(axis=-1)     # (B, T)
+
+
+def _verify_and_retry_group(g: StagedGroup, bank: BankArray,
+                            lay: HorizontalLayout, group_codes: np.ndarray,
+                            acc_val: np.ndarray, n_adds_all: np.ndarray,
+                            fault: FaultSession, max_retries: int,
+                            trace: FaultTrace, layer: int = 0) -> np.ndarray:
+    """Inject + ABFT-verify + bounded re-execution of one wave group.
+
+    The expected accumulator COLUMN SUM of a correct (request, tile) cell
+    is codes·checksum (GeMV linearity: the sum of the resident rows is
+    itself a valid weight row), and every injection is a single ±1
+    column-sum perturbation, so `expected != actual` flags exactly the
+    corrupted cells. A retry re-executes the WHOLE group segment with
+    fresh fault draws — billed to the bank ledger like the first pass and
+    recorded as an extra wave in `trace.retry_wave_ops` (reconciled into
+    `timing.price_program`). Cells that come back clean are merged;
+    sticky cells that outlive the budget are reported unresolved, with
+    their (channel, bank) homes, for the engine's quarantine/degrade
+    escalation.
+    """
+    mask = (1 << lay.r) - 1
+    expected = (group_codes.astype(np.int64)
+                * g.checksum[None]).sum(axis=-1)               # (B, T)
+    corrupted = fault.corrupt_accumulator(acc_val, g.bank_keys)
+    detected = expected != acc_val.sum(axis=2)
+    trace.corrupted += int(corrupted.sum())
+    trace.detected += int((detected & corrupted).sum())
+    tries = 0
+    while detected.any() and tries < max_retries:
+        tries += 1
+        acc_new = (np.matmul(group_codes.transpose(1, 0, 2), g.matrix_block)
+                   .astype(np.int64).transpose(1, 0, 2) & mask)
+        fault.corrupt_accumulator(acc_new, g.bank_keys)
+        det_new = expected != acc_new.sum(axis=2)
+        fix = detected & ~det_new
+        acc_val[fix] = acc_new[fix]
+        detected &= det_new
+        # the retry re-runs the segment end to end: re-bill clear + add
+        # templates + readout, and record the extra wave's serialization
+        clear_accumulator(bank, lay)
+        for k in range(n_adds_all.shape[-1]):
+            bank.charge_adds(adder_cost(lay.r - k), n_adds_all[..., k])
+        bank.charge_host_read(lay.acc_rows)
+        ops_bt = _group_retry_ops(lay, n_adds_all)
+        trace.retries += 1
+        trace.retry_wave_ops.append(int(ops_bt.sum(axis=0).max()))
+    if detected.any():
+        for b, t in zip(*np.nonzero(detected)):
+            trace.unresolved.append((int(b), layer, int(g.tiles_idx[t])))
+            cb = (int(g.bank_keys[t][0]), int(g.bank_keys[t][1]))
+            if cb not in trace.unresolved_banks:
+                trace.unresolved_banks.append(cb)
+    return acc_val
+
+
 def _execute_staged(staged: StagedWaves, chunk_codes: list, chunk_popc: list,
-                    chunk_zero_adds: list, B: int):
+                    chunk_zero_adds: list, B: int,
+                    fault: Optional[FaultSession] = None,
+                    max_retries: int = 0,
+                    trace: Optional[FaultTrace] = None):
     """Steps ②–④ against resident rows: run B activation streams through
     every staged wave group, with NO weight staging.
 
@@ -857,6 +942,13 @@ def _execute_staged(staged: StagedWaves, chunk_codes: list, chunk_popc: list,
     billed per offset template. Returns partials (B, n_chunks, m) and the
     (B, tiles, len(_COUNT_FIELDS)) runtime count matrix — per-(request,
     tile) counts identical to the sequential per-request oracle (tested).
+
+    `fault` (a `faults.FaultSession`) corrupts each group's accumulator
+    values per its model; ABFT checksum verification then localizes the
+    corrupt (request, tile) cells and re-executes the group up to
+    `max_retries` times, accumulating observations into `trace`. With
+    `fault=None` (the default, and what `FaultModel.none()` produces) this
+    path is bit-identical to the pre-fault executor — outputs AND counts.
     """
     m, p = staged.m, staged.p
     q_shift = np.arange(staged.q, dtype=np.int64)
@@ -872,24 +964,28 @@ def _execute_staged(staged: StagedWaves, chunk_codes: list, chunk_popc: list,
         acc_val = (np.matmul(group_codes.transpose(1, 0, 2), g.matrix_block)
                    .astype(np.int64).transpose(1, 0, 2)
                    & ((1 << lay.r) - 1))                       # (B, T, cols)
-        # one deferred row materialization for all p offsets — the
-        # intermediate states are never observed, and the rows end up
-        # holding the bank's final time-shared occupant
-        write_accumulator_wave(bank, lay, acc_val)
         group_popc = np.stack([chunk_popc[c] for c in g.chunks],
                               axis=1)                          # (B, T, p)
+        n_adds_all = group_popc
+        if chunk_zero_adds[g.chunks[0]] is not None:
+            n_adds_all = n_adds_all + np.stack(
+                [chunk_zero_adds[c] for c in g.chunks], axis=1)
         for k in range(p):
-            n_adds = group_popc[..., k]
-            if chunk_zero_adds[g.chunks[0]] is not None:
-                n_adds = n_adds + np.stack(
-                    [chunk_zero_adds[c][:, k] for c in g.chunks], axis=1)
-            bank.charge_adds(adder_cost(lay.r - k), n_adds)
+            bank.charge_adds(adder_cost(lay.r - k), n_adds_all[..., k])
         # readout: each request reads its accumulator rows back at its
         # turn. The charge goes through the device API (shared traffic —
         # every request's view bills its own r-row read); the VALUES come
         # from the arithmetic track, which on the reliable slot columns is
         # bit-identical to the rows each occupant held.
         bank.charge_host_read(lay.acc_rows)
+        if fault is not None:
+            acc_val = _verify_and_retry_group(
+                g, bank, lay, group_codes, acc_val, n_adds_all, fault,
+                max_retries, trace)
+        # one deferred row materialization for all p offsets — the
+        # intermediate states are never observed, and the rows end up
+        # holding the bank's final (post-retry) time-shared occupant
+        write_accumulator_wave(bank, lay, acc_val)
         outs = (acc_val[:, :, staged.slot_cols]
                 .reshape(B, T, staged.m_per_tile, staged.q)
                 << q_shift).sum(axis=-1)                       # (B, T, m_per)
@@ -958,7 +1054,9 @@ def mvdram_gemv_batched(aq: QuantizedTensor, wq: QuantizedTensor,
                         geom: PudGeometry = PudGeometry(),
                         reliable_cols: Optional[np.ndarray] = None,
                         templates: Optional[CommandTemplates] = None,
-                        staged: Optional[StagedWaves] = None):
+                        staged: Optional[StagedWaves] = None,
+                        fault: Optional[FaultSession] = None,
+                        max_retries: int = 0):
     """B GeMVs against one resident matrix, executed in SHARED waves.
 
     `aq.values` is (B, N) activation codes with per-request scales (B, 1) —
@@ -979,6 +1077,10 @@ def mvdram_gemv_batched(aq: QuantizedTensor, wq: QuantizedTensor,
     weight staging — `report.shared_preload` and every per-request preload
     are zero, `report.resident` is True — while outputs and per-tile
     RUNTIME OpCounts stay bit-identical to the fresh-staging path (tested).
+
+    `fault` (a `faults.FaultSession`) runs the launch under fault
+    injection with ABFT verification and up to `max_retries` wave-segment
+    re-executions; the observations land in `report.fault`.
     """
     a_u = np.asarray(aq.values, dtype=np.uint32)
     if a_u.ndim != 2:
@@ -1007,13 +1109,16 @@ def mvdram_gemv_batched(aq: QuantizedTensor, wq: QuantizedTensor,
     else:
         staged = _stage_waves(w_u, q, p, geom, bsched.base, slots,
                               reliable_cols, n_sub, m)
-    partials, rt_arrs = _execute_staged(staged, codes, popc, zero_adds, B)
+    trace = FaultTrace() if fault is not None else None
+    partials, rt_arrs = _execute_staged(staged, codes, popc, zero_adds, B,
+                                        fault=fault, max_retries=max_retries,
+                                        trace=trace)
     # Resident launches stage nothing: the placement already paid the
     # preload (recorded in `StagedWaves.preload` / `Placement.staged`).
     pre_arr = (np.zeros_like(staged.preload) if resident
                else staged.preload)
     report = _build_batch_report(staged, bsched, rt_arrs, pre_arr,
-                                 skipped_b, r_bits, resident)
+                                 skipped_b, r_bits, resident, fault=trace)
 
     out = _aggregate_host(partials, a_u, w_u, aq, wq, n_chunks, n_sub, gs, g)
     out = out * np.asarray(aq.scale, dtype=np.float64).reshape(B, 1)
@@ -1023,7 +1128,8 @@ def mvdram_gemv_batched(aq: QuantizedTensor, wq: QuantizedTensor,
 def _build_batch_report(staged: StagedWaves, bsched: BatchSchedule,
                         rt_arrs: np.ndarray, pre_arr: np.ndarray,
                         skipped_b: np.ndarray, r_bits: int,
-                        resident: bool) -> BatchReport:
+                        resident: bool,
+                        fault: Optional[FaultTrace] = None) -> BatchReport:
     """Materialize per-request `TileReport`s + shared batch accounting from
     array-native executor counts. Shared by the batched launch path and the
     fused program executor's LAZY report builder — both produce the same
@@ -1063,7 +1169,8 @@ def _build_batch_report(staged: StagedWaves, bsched: BatchSchedule,
                        runtime=batch_runtime,
                        wave_max=tuple(batch_wave_max),
                        resident=resident,
-                       staged=staged.staged_counts)
+                       staged=staged.staged_counts,
+                       fault=fault)
 
 
 def _check_staged(staged: StagedWaves, n: int, m: int, q: int, p: int,
@@ -1098,6 +1205,8 @@ _M3_I = _COUNT_FIELDS.index("maj3")
 _M5_I = _COUNT_FIELDS.index("maj5")
 _HBR_I = _COUNT_FIELDS.index("host_bits_read")
 _HIO_I = _COUNT_FIELDS.index("host_int_ops")
+_PUD_I = np.asarray([_COUNT_FIELDS.index(f) for f in
+                     ("row_copy", "maj3", "maj5", "majx_other")])
 
 
 @dataclasses.dataclass
@@ -1171,6 +1280,8 @@ class FusedProgram:
     valid: np.ndarray          # (S, m_max) live outputs
     gout: np.ndarray           # (n_valid,) flat global output indices
     waves: list                # (W,) FusedWave
+    checksum: np.ndarray = None   # (S, n_pad) ABFT column-sum row per slot
+    bank_keys: np.ndarray = None  # (S, 2) (channel, bank) home per slot
 
     @property
     def layers(self) -> int:
@@ -1281,12 +1392,19 @@ def stage_program(stageds, sched: ProgramSchedule) -> FusedProgram:
                                out_hi=int(out_ptr[s_i]),
                                segments=segments))
         w_lo = s_i
+    bank_keys = np.asarray([(slot.channel, slot.bank)
+                            for slot in sched.slots], dtype=np.int64)
     return FusedProgram(sched=sched, stageds=stageds, geom=geom,
                         n_pad=n_pad, p_max=p_max, chunk0=chunk0, out0=out0,
                         matrix=matrix, gchunk=gchunk, mask_r=mask_r,
                         static=static, add_rc=add_rc, add_m3=add_m3,
                         colidx=colidx, mult=mult, valid=valid, gout=gout,
-                        waves=waves)
+                        waves=waves,
+                        # ABFT checksum per slot: the column sum of a tile's
+                        # resident rows (zero on the n_pad padding, so the
+                        # padded code gather contributes nothing)
+                        checksum=matrix.sum(axis=-1).astype(np.int64),
+                        bank_keys=bank_keys)
 
 
 @dataclasses.dataclass
@@ -1306,14 +1424,75 @@ class ProgramRunResult:
     skipped: list              # (L,) (B,) skipped zero bits per request
     r_bits: list               # (L,) max accumulator width per layer
     wave_max: np.ndarray       # (W, _F) executed per-wave maxima (B-summed)
+    # Fault-injected runs: PUD op count of every EXTRA wave a retry cost
+    # (reconciled into `timing.price_program(retry_wave_ops=…)`), plus the
+    # launch's `FaultTrace`; empty/None on fault-free runs.
+    retry_wave_ops: list = dataclasses.field(default_factory=list)
+    fault: Optional[FaultTrace] = None
 
     @property
     def waves(self) -> int:
         return self.wave_max.shape[0]
 
 
+def _verify_and_retry_wave(plan: FusedProgram, wv: FusedWave,
+                           codes_w: np.ndarray, acc: np.ndarray,
+                           counts_all: np.ndarray, fault: FaultSession,
+                           max_retries: int, trace: FaultTrace,
+                           retry_wave_ops: list) -> np.ndarray:
+    """Inject + ABFT-verify + bounded re-execution of one FUSED wave.
+
+    Same contract as `_verify_and_retry_group`, at fused-wave granularity:
+    the expected column sum of every member slot is codes·checksum, a
+    retry re-runs the wave's matmul with fresh fault draws, re-bills each
+    segment's ledger, and records the wave's B-summed slowest-tile PUD
+    serialization as one extra wave in `retry_wave_ops`.  Cells corrupt
+    past the budget are reported as (request, layer, tile) with their
+    (channel, bank) homes.
+    """
+    lo, hi = wv.lo, wv.hi
+    expected = (codes_w.astype(np.int64)
+                * plan.checksum[None, lo:hi]).sum(axis=-1)     # (B, T)
+    corrupted = fault.corrupt_accumulator(acc, plan.bank_keys[lo:hi])
+    detected = expected != acc.sum(axis=2)
+    trace.corrupted += int(corrupted.sum())
+    trace.detected += int((detected & corrupted).sum())
+    # B-summed, slowest member tile: the serialization one extra execution
+    # of this wave costs (identical math to the base `wave_max` rows)
+    wave_pud = int(counts_all.sum(axis=0)[lo:hi][:, _PUD_I]
+                   .sum(axis=-1).max())
+    tries = 0
+    while detected.any() and tries < max_retries:
+        tries += 1
+        acc_new = np.matmul(codes_w.transpose(1, 0, 2),
+                            plan.matrix[lo:hi]).astype(np.int64)
+        acc_new = acc_new.transpose(1, 0, 2) & plan.mask_r[lo:hi]
+        fault.corrupt_accumulator(acc_new, plan.bank_keys[lo:hi])
+        det_new = expected != acc_new.sum(axis=2)
+        fix = detected & ~det_new
+        acc[fix] = acc_new[fix]
+        detected &= det_new
+        for seg in wv.segments:
+            seg.group.bank.charge_counts(
+                counts_all[:, lo + seg.lo:lo + seg.hi], tiles=seg.pos)
+        trace.retries += 1
+        trace.retry_wave_ops.append(wave_pud)
+        retry_wave_ops.append(wave_pud)
+    if detected.any():
+        for b, t in zip(*np.nonzero(detected)):
+            slot = plan.sched.slots[lo + int(t)]
+            trace.unresolved.append((int(b), slot.layer, slot.tile))
+            cb = (int(plan.bank_keys[lo + int(t)][0]),
+                  int(plan.bank_keys[lo + int(t)][1]))
+            if cb not in trace.unresolved_banks:
+                trace.unresolved_banks.append(cb)
+    return acc
+
+
 def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
-                    sparsity: bool = True) -> ProgramRunResult:
+                    sparsity: bool = True,
+                    fault: Optional[FaultSession] = None,
+                    max_retries: int = 0) -> ProgramRunResult:
     """One decode step, wave-major: encode every layer's (B, N_l) lane batch
     once, then walk the fused schedule's waves — each wave ONE batched step
     (padded code gather → one BLAS matmul across all member tiles, even
@@ -1325,6 +1504,14 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
     the layers one at a time through `_execute_staged` (the layer-major
     oracle, property-tested); only the WAVE axis — and hence wall-clock and
     the executed wave serialization — changes.
+
+    `fault` runs the step under injection: each wave's accumulator is
+    ABFT-verified against the per-slot checksums and re-executed up to
+    `max_retries` times (each retry an EXTRA wave, its serialization
+    recorded in `retry_wave_ops` for `timing.price_program`); unresolved
+    (request, layer, tile) cells land in the returned `fault` trace for
+    the engine's quarantine/degrade escalation. With `fault=None` the path
+    is bit-identical to the pre-fault executor.
     """
     L = plan.layers
     if len(aqs) != L or len(wqs) != L:
@@ -1383,6 +1570,8 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
     wave_lo = np.asarray([wv.lo for wv in plan.waves], dtype=np.int64)
     wave_max = np.maximum.reduceat(counts_all.sum(axis=0), wave_lo, axis=0)
 
+    trace = FaultTrace() if fault is not None else None
+    retry_wave_ops: list = []
     partials_flat = np.zeros((B, int(plan.out0[-1])), dtype=np.int64)
     for wv in plan.waves:
         lo, hi = wv.lo, wv.hi
@@ -1393,6 +1582,10 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
         acc = np.matmul(codes_w.transpose(1, 0, 2),
                         plan.matrix[lo:hi]).astype(np.int64)
         acc = acc.transpose(1, 0, 2) & plan.mask_r[lo:hi]  # (B, T, cols)
+        if fault is not None:
+            acc = _verify_and_retry_wave(plan, wv, codes_w, acc, counts_all,
+                                         fault, max_retries, trace,
+                                         retry_wave_ops)
         # readout: every tile's own slot columns and q shifts
         ti = np.arange(hi - lo)
         vals = (acc[:, ti[:, None, None], plan.colidx[lo:hi]]
@@ -1423,7 +1616,8 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
         out = out * np.asarray(aq.scale, dtype=np.float64).reshape(B, 1)
         outs.append(out.astype(np.float32))
     return ProgramRunResult(outs=outs, rt_arrs=rt_arrs, skipped=skipped,
-                            r_bits=r_bits_l, wave_max=wave_max)
+                            r_bits=r_bits_l, wave_max=wave_max,
+                            retry_wave_ops=retry_wave_ops, fault=trace)
 
 
 def _gemv_tile_on_slots(w_tile, a_tile, q, p, sparsity, geom,

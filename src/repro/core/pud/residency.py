@@ -129,11 +129,16 @@ class DramPool:
         self._cursor = 0       # rotating §VII bank cursor across placements
         self._seq = 0          # monotonic placement/touch counter
         self._lru: dict[str, int] = {}
+        # Quarantined (channel, bank) homes: analog-fault escalation marks a
+        # bank unhealthy, evicts its residents, and excludes it from every
+        # future placement rotation / first-fit / reserve pin.
+        self._quarantined: set = set()
         self.evictions = 0
         self.replacements = 0
         self.compactions = 0
         self.moved_placements = 0
         self.restaged_bits = 0     # host writes re-paid for compaction moves
+        self.quarantine_evictions = 0
         # called as fn(name, placement) on EVERY eviction — including the
         # pool-driven ones (LRU on_full, replace) — so owners (the engine)
         # can drop staged state and invalidate handles
@@ -181,20 +186,34 @@ class DramPool:
             "restaged_bits": self.restaged_bits,
             "staged_bits": sum(p.staged.host_bits_written
                                for p in self.placements.values()),
+            "quarantined_banks": len(self._quarantined),
+            "quarantine_evictions": self.quarantine_evictions,
         }
 
     # -- placement -----------------------------------------------------------
 
+    def _healthy_slots(self) -> list:
+        """Rank slots in §VII rotation order, quarantined banks excluded.
+        With nothing quarantined this is exactly the (channels ·
+        banks_per_channel)-slot rotation, so placement is unchanged."""
+        g = self.geom
+        slots = [(s % g.channels, (s // g.channels) % g.banks_per_channel)
+                 for s in range(g.parallel_tiles)]
+        return [cb for cb in slots if cb not in self._quarantined]
+
     def _tile_banks(self, tiles: int) -> list:
         """Continue the §VII round-robin from the pool cursor: tile t of the
         new matrix computes on rank slot (cursor + t), so co-resident layers
-        stagger across banks instead of all starting at (0, 0)."""
-        g = self.geom
-        out = []
-        for t in range(tiles):
-            s = self._cursor + t
-            out.append((s % g.channels, (s // g.channels) % g.banks_per_channel))
-        return out
+        stagger across banks instead of all starting at (0, 0). Quarantined
+        banks drop out of the rotation — the surviving slots absorb their
+        tiles."""
+        healthy = self._healthy_slots()
+        if not healthy:
+            raise CapacityError(
+                f"every bank of the rank is quarantined "
+                f"({len(self._quarantined)}/{self.geom.parallel_tiles})")
+        return [healthy[(self._cursor + t) % len(healthy)]
+                for t in range(tiles)]
 
     def _demand(self, banks: Sequence, chunk_rows: Sequence[int],
                 col_chunks: int) -> dict:
@@ -207,6 +226,8 @@ class DramPool:
 
     def _find_gap(self, cb: tuple, rows: int) -> Optional[int]:
         """First-fit contiguous free run of `rows` rows in bank `cb`."""
+        if cb in self._quarantined:
+            return None
         cur = 0
         for row0, row1, _name in self._occ[cb]:
             if row0 - cur >= rows:
@@ -302,6 +323,10 @@ class DramPool:
             if s.row1 > self.bank_capacity or s.row0 < 0:
                 raise CapacityError(
                     f"span {s} exceeds bank capacity {self.bank_capacity}")
+            if (s.channel, s.bank) in self._quarantined:
+                raise ResidencyError(
+                    f"span {s} pins rows on quarantined bank "
+                    f"(channel {s.channel}, bank {s.bank})")
             for row0, row1, other in self._occ[(s.channel, s.bank)]:
                 if s.row0 < row1 and row0 < s.row1:
                     raise ResidencyError(
@@ -337,6 +362,36 @@ class DramPool:
         for fn in self.evict_listeners:
             fn(name, placement)
         return placement
+
+    # -- bank health ---------------------------------------------------------
+
+    def is_quarantined(self, channel: int, bank: int) -> bool:
+        return (channel, bank) in self._quarantined
+
+    def quarantined(self) -> list:
+        return sorted(self._quarantined)
+
+    def quarantine_bank(self, channel: int, bank: int) -> list:
+        """Mark one (channel, bank) unhealthy: its residents are evicted
+        (owners notified through `evict_listeners`, exactly like LRU
+        evictions) and no future placement — rotation, first-fit, or
+        `reserve()` pin — will touch it. Returns the evicted placement
+        names so the caller (the engine's fault-recovery policy) can
+        re-place them on healthy banks. Idempotent."""
+        cb = (channel, bank)
+        if cb in self._quarantined:
+            return []
+        if not (0 <= channel < self.geom.channels
+                and 0 <= bank < self.geom.banks_per_channel):
+            raise ResidencyError(
+                f"no such bank: channel {channel}, bank {bank} in a "
+                f"{self.geom.channels}x{self.geom.banks_per_channel} rank")
+        self._quarantined.add(cb)
+        victims = sorted({e[2] for e in self._occ[cb]})
+        for name in victims:
+            self.evict(name)
+            self.quarantine_evictions += 1
+        return victims
 
     def compact(self) -> dict:
         """Defragment every bank: slide pool-driven resident spans down so

@@ -343,11 +343,16 @@ class ProgramCost:
     e_io: float
     e_host: float
     sequential: tuple      # (L,) per-layer isolated BatchedPudCost
+    # Fault retries: EXTRA wave serializations a fault-injected run paid
+    # (bounded re-execution of corrupt wave segments, `gemv` ABFT path);
+    # zero on fault-free runs, so the pre-fault pricing is unchanged.
+    t_retry: float = 0.0
+    retry_waves: int = 0
 
     @property
     def t_total(self) -> float:
         return (self.t_compute + self.t_aggregate + self.t_encode_extra
-                + self.t_weight_load)
+                + self.t_weight_load + self.t_retry)
 
     @property
     def e_total(self) -> float:
@@ -374,7 +379,8 @@ class ProgramCost:
 def price_program(costs, sched: ProgramSchedule, batch: int = 1,
                   geom: PudGeometry = PudGeometry(),
                   model: DDR4Model = DDR4_2400,
-                  executed_wave_ops=None) -> ProgramCost:
+                  executed_wave_ops=None,
+                  retry_wave_ops=None) -> ProgramCost:
     """Price one decode step of a compiled program of resident GeMVs.
 
     costs: (L,) per-layer analytic `GemvCost` (single-pass, e.g.
@@ -395,6 +401,13 @@ def price_program(costs, sched: ProgramSchedule, batch: int = 1,
     analytic bank-serialization estimate with the measurement, after
     checking that execution ran exactly the waves this schedule fused. At
     dense activation bits and non-ragged grids the two are equal (tested).
+
+    `retry_wave_ops` — PUD op counts of the EXTRA waves fault retries cost
+    (one entry per re-executed wave segment, B lanes summed;
+    `gemv.ProgramRunResult.retry_wave_ops`) — lands as a separate `t_retry`
+    term so fault-storm overhead is visible next to, not folded into, the
+    scheduled compute time. The base wave-count validation is unchanged:
+    retries are extras on top of the schedule's waves, not members of it.
     """
     costs = list(costs)
     if len(costs) != sched.layers:
@@ -431,6 +444,8 @@ def price_program(costs, sched: ProgramSchedule, batch: int = 1,
                        for c in costs) * model.e_bit_io
     e_host = (batch * sum(c.runtime.host_int_ops for c in costs)
               * model.e_host_op + model.idle_power * t_compute)
+    retry_wave_ops = list(retry_wave_ops) if retry_wave_ops else []
+    t_retry = float(sum(retry_wave_ops)) * model.t_op
     return ProgramCost(
         layers=len(costs), batch=batch,
         t_compute=t_compute, t_aggregate=t_aggregate,
@@ -440,7 +455,8 @@ def price_program(costs, sched: ProgramSchedule, batch: int = 1,
         waves=sched.waves, waves_shared=sched.waves_shared,
         e_pud=e_pud, e_io=e_io, e_host=e_host,
         sequential=tuple(price_gemv_batched(c, batch, geom, model)
-                         for c in costs))
+                         for c in costs),
+        t_retry=t_retry, retry_waves=len(retry_wave_ops))
 
 
 # ---------------------------------------------------------------------------

@@ -106,6 +106,10 @@ class ServeEngine:
         self.slots = batch_slots
         self.mvdram: Optional[MVDRAMEngine] = None
         self.decode_program: Optional[GemvProgram] = None
+        # True when the model did not fit the DramPool and serving fell
+        # back to the program-less jit path (surfaced in residency_stats —
+        # it used to be visible only as a warning at construction)
+        self.placement_fallback = False
         model_impl = impl
         if quantized:
             params = quantize_params(params, cfg.weight_bits)
@@ -188,6 +192,7 @@ class ServeEngine:
             # just placed and make compile fail anyway) and serve through
             # the jit path without a resident decode program
             import warnings
+            self.placement_fallback = True
             for name in names:
                 if self.mvdram.pool.is_resident(name):
                     self.mvdram.evict(name)
@@ -225,8 +230,16 @@ class ServeEngine:
         return cost.asdict()
 
     def residency_stats(self) -> Optional[dict]:
-        return (self.mvdram.residency_stats()
-                if self.mvdram is not None else None)
+        """The engine's pool/fault counters plus the serving-level fallback
+        flags: `placement_fallback` (the model did not fit the pool and
+        serves program-less) and `resident_program` (a compiled fused
+        decode program is live). None for unquantized engines."""
+        if self.mvdram is None:
+            return None
+        stats = self.mvdram.residency_stats()
+        stats["placement_fallback"] = self.placement_fallback
+        stats["resident_program"] = self.decode_program is not None
+        return stats
 
     def _decode_scan_fn(self, trip: int):
         """ONE masked jitted scan over `trip` decode slots (a power-of-two

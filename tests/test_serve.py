@@ -199,3 +199,51 @@ def test_moe_experts_served_bitplane():
     out, _ = jax.jit(Model(cfg).forward)(pq, batch)
     rel = float(jnp.abs(out - ref).max() / (jnp.abs(ref).max() + 1e-9))
     assert rel < 0.05, rel
+
+
+def test_placement_fallback_surfaced_in_residency_stats(monkeypatch):
+    """A model that does not fit the DramPool serves program-less — and the
+    fallback is now VISIBLE in residency_stats() (placement_fallback /
+    resident_program), not just a construction-time warning."""
+    import repro.serve.engine as serve_mod
+    from repro.core.engine import MVDRAMEngine
+    from repro.core.pud.gemv import PudGeometry
+    from repro.core.pud.residency import DramPool
+
+    orig = serve_mod.MVDRAMEngine
+
+    def tiny_engine(**kw):
+        # a pool with almost no resident rows: placement MUST overflow
+        geom = PudGeometry()
+        pool = DramPool(geom, compute_reserve=geom.bank_rows - 4)
+        return orig(pool=pool, **kw)
+
+    monkeypatch.setattr(serve_mod, "MVDRAMEngine", tiny_engine)
+    cfg = dataclasses.replace(tiny_config("llama2-7b"), dtype="float32",
+                              weight_bits=8)
+    params = init_params(param_defs(cfg), KEY)
+    with pytest.warns(RuntimeWarning, match="does not fit the DramPool"):
+        eng = ServeEngine(cfg, params, max_seq=32, quantized=True)
+    assert eng.decode_program is None
+    stats = eng.residency_stats()
+    assert stats["placement_fallback"] is True
+    assert stats["resident_program"] is False
+    assert stats["placements"] == 0          # partial residency rolled back
+    assert eng.price_decode_step() is None
+    # the engine still serves through the jit path
+    prompts = jnp.zeros((1, 4), jnp.int32)
+    out = eng.generate(prompts, max_new=4)
+    assert out.shape == (1, 8)
+
+
+def test_resident_serving_reports_no_fallback():
+    cfg = dataclasses.replace(tiny_config("llama2-7b"), dtype="float32",
+                              weight_bits=8)
+    params = init_params(param_defs(cfg), KEY)
+    eng = ServeEngine(cfg, params, max_seq=32, quantized=True)
+    stats = eng.residency_stats()
+    assert stats["placement_fallback"] is False
+    assert stats["resident_program"] is True
+    assert stats["fault_corrupted"] == 0      # no fault model configured
+    assert stats["degraded_layers"] == []
+    assert ServeEngine(cfg, params, max_seq=32).residency_stats() is None

@@ -46,9 +46,10 @@ from .backends import Backend
 from .bitplane import BitplaneWeights, from_quantized, to_quantized
 from .pud.faults import FaultModel, FaultPolicy, FaultTrace
 from .pud.gemv import (CommandTemplates, GemvCost, PudGeometry, StagedWaves,
-                       build_templates, conventional_pud_cost,
-                       execute_program, mvdram_gemv_batched,
-                       mvdram_gemv_cost, stage_matrix, stage_program)
+                       _lane_mask_arg, build_templates,
+                       conventional_pud_cost, execute_program,
+                       mvdram_gemv_batched, mvdram_gemv_cost, stage_matrix,
+                       stage_program)
 from .pud.residency import CapacityError, DramPool, Placement
 from .pud.schedule import (ProgramSchedule, schedule_batch, schedule_program,
                            schedule_tiles)
@@ -145,12 +146,17 @@ class ProgramReport:
 
     def __init__(self, reports=None, builder=None, fused: bool = False,
                  waves: int = 0, wave_max_arr=None, batch: int = 1,
-                 retry_wave_ops=(), fault: Optional[FaultTrace] = None):
+                 retry_wave_ops=(), fault: Optional[FaultTrace] = None,
+                 lanes: Optional[int] = None):
         self._reports = reports
         self._builder = builder
         self.fused = fused
         self.waves = waves
-        self.batch = batch          # lane batch the step executed
+        self.batch = batch          # OCCUPIED lanes the step executed
+        # lane CAPACITY of the launch (== batch unless an occupancy mask
+        # idled some lanes — masked lanes bill zero ops, so `batch` is what
+        # `price_program(..., executed=…)` reconciles against)
+        self.lanes = batch if lanes is None else lanes
         self._wave_max_arr = wave_max_arr
         # fault-retry waves the step EXECUTED beyond the schedule (ABFT
         # re-runs of corrupt wave segments, each entry one wave's B-summed
@@ -228,11 +234,17 @@ class GemvProgram:
     """
 
     def __init__(self, engine: "MVDRAMEngine", handles: tuple,
-                 sched: ProgramSchedule, groups: tuple):
+                 sched: ProgramSchedule, groups: tuple,
+                 b_max: Optional[int] = None):
         self.engine = engine
         self.handles = handles
         self.sched = sched
         self.groups = groups
+        # lane CAPACITY baked into the program (None = legacy fixed-B):
+        # every run launches exactly b_max lanes, with the per-tick
+        # occupancy carried by run(lane_mask=…) — zero recompilation and
+        # zero re-staging as lanes join/leave
+        self.b_max = b_max
         self.steps = 0
         self._fused = None          # gemv.FusedProgram, built lazily
         self._fused_staged = None   # the StagedWaves the plan indexes
@@ -264,7 +276,8 @@ class GemvProgram:
         return tuple(staged)
 
     def run(self, activations: Sequence[jax.Array],
-            layer_major: bool = False):
+            layer_major: bool = False,
+            lane_mask: Optional[np.ndarray] = None):
         """Execute one decode step: activations[l] is layer l's (B, N_l)
         lane batch (or an (N_l,) vector, promoted to B=1). Returns
         ([(B, M_l) outputs], `ProgramReport`) — outputs and per-tile
@@ -275,7 +288,15 @@ class GemvProgram:
         batched simulator step per global wave, cross-layer boundary waves
         included); `layer_major=True` runs the retained per-layer oracle.
         The fused path requires every layer to carry the same lane batch —
-        one decode step, one set of lanes."""
+        one decode step, one set of lanes.
+
+        `lane_mask` (B,) bool executes the step at partial occupancy: the
+        launch still carries all B lanes (B == `b_max` for a capacity
+        program), but masked lanes bill zero ops and return zero rows —
+        active lanes are bit-identical to a compacted launch, the report's
+        `batch` is the OCCUPIED lane count (what `price` reconciles) and
+        `lanes` the capacity. Lanes join/leave across ticks with zero
+        recompilation and zero re-staging."""
         import jax.numpy as jnp
         if len(activations) != self.layers:
             raise ValueError(
@@ -291,7 +312,8 @@ class GemvProgram:
                 if squeeze:
                     x = x[None, :]
                 # the same resident launch the sim backend executes
-                out, rep = self.engine.run_resident(h, x, staged)
+                out, rep = self.engine.run_resident(h, x, staged,
+                                                    lane_mask=lane_mask)
                 outs.append(jnp.asarray(out[0] if squeeze else out))
                 reports.append(rep)
             self.steps += 1
@@ -301,10 +323,13 @@ class GemvProgram:
                 for r in reports:
                     if r.fault is not None:
                         fault.merge(r.fault)
+            lanes = reports[0].batch if reports else 1
+            active = (lanes if lane_mask is None
+                      else int(np.count_nonzero(lane_mask)))
             return outs, ProgramReport(
                 reports=tuple(reports), fused=False,
                 waves=sum(r.waves for r in reports),
-                batch=reports[0].batch if reports else 1,
+                batch=active, lanes=lanes,
                 retry_wave_ops=fault.retry_wave_ops if fault else (),
                 fault=fault)
 
@@ -317,6 +342,8 @@ class GemvProgram:
                 x = x[None, :]
             xs.append(x)
             squeezes.append(squeeze)
+        lane_mask = _lane_mask_arg(
+            lane_mask, xs[0].shape[0] if xs else 1)
         staged = self._staged_layers()
         if (self._fused is None or self._fused_staged is None
                 or any(a is not b
@@ -324,7 +351,8 @@ class GemvProgram:
             # (re)index the fused plan over the CURRENT resident rows —
             # eviction/re-registration or pool compaction re-stages a
             # layer, and the plan must follow it
-            self._fused = stage_program(staged, self.sched)
+            self._fused = stage_program(staged, self.sched,
+                                        b_max=self.b_max)
             self._fused_staged = staged
             if self.engine._fault_session is not None:
                 # fault keys track the CURRENT pool homes, not the banks
@@ -340,13 +368,17 @@ class GemvProgram:
             [h.templates for h in self.handles],
             sparsity=self.engine.sparsity,
             fault=self.engine._fault_session,
-            max_retries=self.engine.fault_policy.max_wave_retries)
+            max_retries=self.engine.fault_policy.max_wave_retries,
+            lane_mask=lane_mask)
         for h in self.handles:
             self.engine.pool.touch(h.name)
+        lanes = xs[0].shape[0] if xs else 1
+        active = (lanes if lane_mask is None
+                  else int(np.count_nonzero(lane_mask)))
         report = ProgramReport(
             builder=_resident_report_builder(staged, res, self.engine.geom),
             fused=True, waves=res.waves, wave_max_arr=res.wave_max,
-            batch=xs[0].shape[0] if xs else 1,
+            batch=active, lanes=lanes,
             retry_wave_ops=res.retry_wave_ops, fault=res.fault)
         outs = [jnp.asarray(o) for o in res.outs]
         if res.fault is not None:
@@ -356,6 +388,11 @@ class GemvProgram:
                 # failing banks and host-recompute the affected layers
                 outs = self.engine._recover(self.handles, xs, outs,
                                             res.fault)
+                if lane_mask is not None:
+                    # the host recompute sees the masked lanes' raw
+                    # activations — keep their rows contractually zero
+                    keep = jnp.asarray(lane_mask)[:, None]
+                    outs = [jnp.where(keep, o, 0) for o in outs]
         outs = [o[0] if sq else o for o, sq in zip(outs, squeezes)]
         self.steps += 1
         return outs, report
@@ -581,24 +618,30 @@ class MVDRAMEngine:
         return be.gemv(self, h, a, fidelity=fidelity, naive=naive, wave=wave)
 
     def run_resident(self, handle: GemvHandle, x: jax.Array,
-                     staged: StagedWaves):
+                     staged: StagedWaves,
+                     lane_mask: Optional[np.ndarray] = None):
         """One resident lane-batched launch against already-staged rows —
         the single execution path shared by the sim backend and compiled
         `GemvProgram` steps (zero weight re-staging). With a fault session
         active the launch ABFT-verifies each wave and retries corrupt
         segments; cells still corrupt past the budget escalate through
-        `_recover` (quarantine / host recompute / degrade)."""
+        `_recover` (quarantine / host recompute / degrade). `lane_mask`
+        executes at partial occupancy (masked lanes bill zero ops and
+        return zero rows)."""
         aq = quantize_activations(x, handle.a_spec)
         out, report = mvdram_gemv_batched(
             aq, handle.wq, sparsity=self.sparsity, geom=self.geom,
             templates=handle.templates, staged=staged,
             fault=self._fault_session,
-            max_retries=self.fault_policy.max_wave_retries)
+            max_retries=self.fault_policy.max_wave_retries,
+            lane_mask=lane_mask)
         self.pool.touch(handle.name)
         if report.fault is not None:
             self._record_fault(report.fault)
             if report.fault.unresolved:
                 out = self._recover([handle], [x], [out], report.fault)[0]
+                if lane_mask is not None:
+                    out = np.where(np.asarray(lane_mask)[:, None], out, 0)
         return out, report
 
     # -- fault recovery (ABFT escalation ladder) ------------------------------
@@ -702,8 +745,8 @@ class MVDRAMEngine:
     # -- compiled decode programs ---------------------------------------------
 
     def compile(self, handles: Sequence[Union[GemvHandle, str]],
-                groups: Optional[Sequence[Sequence[int]]] = None
-                ) -> GemvProgram:
+                groups: Optional[Sequence[Sequence[int]]] = None,
+                b_max: Optional[int] = None) -> GemvProgram:
         """Fuse a decode step's sequence of resident GeMVs into one
         interleaved command schedule. The placements already recorded the
         one-time staging; the simulator's resident rows materialize lazily
@@ -711,7 +754,12 @@ class MVDRAMEngine:
         never pays the numpy staging memory). `groups` marks independent
         layers that may share waves — e.g. [[0, 1, 2], [3]] for q/k/v then
         o — by index into `handles`; default is fully sequential (still
-        zero re-staging)."""
+        zero re-staging). `b_max` compiles a CAPACITY program: every run
+        launches exactly `b_max` lanes and per-tick occupancy flows
+        through `run(lane_mask=…)` — lanes join/leave with zero
+        recompilation."""
+        if b_max is not None and (not isinstance(b_max, int) or b_max < 1):
+            raise ValueError(f"b_max must be a positive int, got {b_max!r}")
         hs = tuple(self.handles[h] if isinstance(h, str) else h
                    for h in handles)
         if not hs:
@@ -739,7 +787,8 @@ class MVDRAMEngine:
         sched = schedule_program(grids, self.geom, groups=groups_t,
                                  placements=placements)
         return GemvProgram(self, hs, sched,
-                           groups_t or tuple((i,) for i in range(len(hs))))
+                           groups_t or tuple((i,) for i in range(len(hs))),
+                           b_max=b_max)
 
     def price_program(self, program: GemvProgram, bit_density: float = 0.5,
                       batch: int = 1,

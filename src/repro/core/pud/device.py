@@ -174,6 +174,7 @@ class BankArray:
         self.rows = rows
         self.cols = cols
         self.batch = batch
+        self.lane_mask = None
         lead = () if batch is None else (batch,)
         self.data = np.zeros((tiles, rows, cols), dtype=np.uint8)
         self.reliable = (np.ones(cols, dtype=bool) if reliable_cols is None
@@ -287,10 +288,19 @@ class BankArray:
     def counts_matrix(self) -> np.ndarray:
         """Per-tile totals as a (…, tiles, len(_COUNT_FIELDS)) int64 matrix
         in `_COUNT_FIELDS` order — the array-native form the GeMV executor
-        aggregates without materializing per-tile OpCounts objects."""
+        aggregates without materializing per-tile OpCounts objects.
+
+        With a lane-occupancy mask armed (`set_batch(batch, lane_mask=…)`),
+        MASKED lanes bill zero: their views drop both the broadcast
+        `shared` commands and any per-lane `extra` charges, so a free lane
+        of a capacity-`B_max` serving tick contributes nothing to per-wave
+        maxima, priced costs, or ABFT-reconciled op counts."""
         base = np.array([getattr(self.shared, f) for f in _COUNT_FIELDS],
                         dtype=np.int64)
-        return base + self.extra
+        cm = base + self.extra
+        if self.batch is not None and self.lane_mask is not None:
+            cm = cm * self.lane_mask[:, None, None]
+        return cm
 
     def tile_counts(self):
         """Per-tile totals: (tiles,) list, or (batch, tiles) nested lists in
@@ -305,15 +315,34 @@ class BankArray:
         self.shared = OpCounts()
         self.extra = np.zeros_like(self.extra)
 
-    def set_batch(self, batch: int | None) -> None:
+    def set_batch(self, batch: int | None,
+                  lane_mask: np.ndarray | None = None) -> None:
         """Re-arm the command ledger for a new launch over `batch` requests.
 
         Residency sessions keep a staged `BankArray` (weight rows written
         once at placement) alive across decode steps; each step starts by
         resetting the ledger to the step's lane count. The bit STATE is
         untouched — matrix rows stay resident, accumulator rows are
-        re-cleared by the executor's `clear_accumulator`."""
+        re-cleared by the executor's `clear_accumulator`.
+
+        `lane_mask` — a (batch,) bool occupancy vector — arms the ledger
+        for a CAPACITY launch: `batch` is the program's B_max and only the
+        True lanes are occupied this tick. Masked lanes' `counts_matrix`
+        views read zero (no broadcast share, no per-lane extras), which is
+        what lets one compiled program serve varying occupancy with no
+        re-staging while `price_program` and the ABFT checksums still
+        reconcile exactly."""
+        if lane_mask is not None:
+            if batch is None:
+                raise ValueError(
+                    "lane_mask requires a batched ledger (batch=None given)")
+            lane_mask = np.asarray(lane_mask, dtype=bool)
+            if lane_mask.shape != (batch,):
+                raise ValueError(
+                    f"lane_mask shape {lane_mask.shape} does not match the "
+                    f"launch capacity batch={batch}")
         self.batch = batch
+        self.lane_mask = lane_mask
         lead = () if batch is None else (batch,)
         self.shared = OpCounts()
         self.extra = np.zeros(lead + (self.tiles, len(_COUNT_FIELDS)),

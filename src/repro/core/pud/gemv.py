@@ -859,6 +859,41 @@ def _chunk_arrays_batched(a_u: np.ndarray, n: int, n_sub: int, p: int,
     return codes, popc, zeros, skipped, r_bits
 
 
+def _lane_mask_arg(lane_mask, B: int):
+    """Validate a lane-occupancy mask against the launch capacity: (B,)
+    bool with at least one active lane (an all-masked tick has nothing to
+    execute — skip it instead). None passes through: all lanes active."""
+    if lane_mask is None:
+        return None
+    m = np.asarray(lane_mask, dtype=bool)
+    if m.shape != (B,):
+        raise ValueError(
+            f"lane_mask shape {m.shape} does not match the lane batch "
+            f"B={B}")
+    if not m.any():
+        raise ValueError(
+            "lane_mask has no active lanes — skip the tick instead of "
+            "executing an empty one")
+    return m
+
+
+def _corrupt_active(fault: FaultSession, acc: np.ndarray, bank_keys,
+                    lane_mask) -> np.ndarray:
+    """Fault-inject only the OCCUPIED lanes of a capacity launch: a masked
+    lane executes nothing physically, so it cannot be corrupted — and its
+    zero ABFT expectation (zero codes → zero column sum) must never see an
+    injected flip, or the retry ladder would chase ghosts. Returns the
+    full-(B, T) ground-truth corrupted mask (False on masked lanes)."""
+    if lane_mask is None:
+        return fault.corrupt_accumulator(acc, bank_keys)
+    sub = np.ascontiguousarray(acc[lane_mask])
+    hit_sub = fault.corrupt_accumulator(sub, bank_keys)
+    acc[lane_mask] = sub
+    hit = np.zeros(acc.shape[:2], dtype=bool)
+    hit[lane_mask] = hit_sub
+    return hit
+
+
 def _group_retry_ops(lay: HorizontalLayout,
                      n_adds_all: np.ndarray) -> np.ndarray:
     """Per-(request, tile) PUD ops of ONE re-execution of a staged group:
@@ -876,7 +911,8 @@ def _verify_and_retry_group(g: StagedGroup, bank: BankArray,
                             lay: HorizontalLayout, group_codes: np.ndarray,
                             acc_val: np.ndarray, n_adds_all: np.ndarray,
                             fault: FaultSession, max_retries: int,
-                            trace: FaultTrace, layer: int = 0) -> np.ndarray:
+                            trace: FaultTrace, layer: int = 0,
+                            lane_mask=None) -> np.ndarray:
     """Inject + ABFT-verify + bounded re-execution of one wave group.
 
     The expected accumulator COLUMN SUM of a correct (request, tile) cell
@@ -894,7 +930,7 @@ def _verify_and_retry_group(g: StagedGroup, bank: BankArray,
     mask = (1 << lay.r) - 1
     expected = (group_codes.astype(np.int64)
                 * g.checksum[None]).sum(axis=-1)               # (B, T)
-    corrupted = fault.corrupt_accumulator(acc_val, g.bank_keys)
+    corrupted = _corrupt_active(fault, acc_val, g.bank_keys, lane_mask)
     detected = expected != acc_val.sum(axis=2)
     trace.corrupted += int(corrupted.sum())
     trace.detected += int((detected & corrupted).sum())
@@ -903,7 +939,7 @@ def _verify_and_retry_group(g: StagedGroup, bank: BankArray,
         tries += 1
         acc_new = (np.matmul(group_codes.transpose(1, 0, 2), g.matrix_block)
                    .astype(np.int64).transpose(1, 0, 2) & mask)
-        fault.corrupt_accumulator(acc_new, g.bank_keys)
+        _corrupt_active(fault, acc_new, g.bank_keys, lane_mask)
         det_new = expected != acc_new.sum(axis=2)
         fix = detected & ~det_new
         acc_val[fix] = acc_new[fix]
@@ -915,6 +951,10 @@ def _verify_and_retry_group(g: StagedGroup, bank: BankArray,
             bank.charge_adds(adder_cost(lay.r - k), n_adds_all[..., k])
         bank.charge_host_read(lay.acc_rows)
         ops_bt = _group_retry_ops(lay, n_adds_all)
+        if lane_mask is not None:
+            # masked lanes re-execute nothing — their share of the retry
+            # wave (static clears included) bills zero ops
+            ops_bt = ops_bt * lane_mask[:, None]
         trace.retries += 1
         trace.retry_wave_ops.append(int(ops_bt.sum(axis=0).max()))
     if detected.any():
@@ -930,7 +970,8 @@ def _execute_staged(staged: StagedWaves, chunk_codes: list, chunk_popc: list,
                     chunk_zero_adds: list, B: int,
                     fault: Optional[FaultSession] = None,
                     max_retries: int = 0,
-                    trace: Optional[FaultTrace] = None):
+                    trace: Optional[FaultTrace] = None,
+                    lane_mask=None):
     """Steps ②–④ against resident rows: run B activation streams through
     every staged wave group, with NO weight staging.
 
@@ -949,6 +990,11 @@ def _execute_staged(staged: StagedWaves, chunk_codes: list, chunk_popc: list,
     `max_retries` times, accumulating observations into `trace`. With
     `fault=None` (the default, and what `FaultModel.none()` produces) this
     path is bit-identical to the pre-fault executor — outputs AND counts.
+
+    `lane_mask` (B,) bool arms a capacity launch: callers zero the masked
+    lanes' codes/popcounts, this executor arms the bank ledgers with the
+    mask (masked lanes bill zero ops, broadcast statics included) and
+    fault injection skips them; outputs of masked lanes come back zero.
     """
     m, p = staged.m, staged.p
     q_shift = np.arange(staged.q, dtype=np.int64)
@@ -957,7 +1003,7 @@ def _execute_staged(staged: StagedWaves, chunk_codes: list, chunk_popc: list,
     for g in staged.groups:
         bank, lay = g.bank, g.lay
         T = g.chunks.shape[0]
-        bank.set_batch(B)
+        bank.set_batch(B, lane_mask)
         clear_accumulator(bank, lay)
         group_codes = np.stack([chunk_codes[c] for c in g.chunks],
                                axis=1)                         # (B, T, n_c)
@@ -981,11 +1027,14 @@ def _execute_staged(staged: StagedWaves, chunk_codes: list, chunk_popc: list,
         if fault is not None:
             acc_val = _verify_and_retry_group(
                 g, bank, lay, group_codes, acc_val, n_adds_all, fault,
-                max_retries, trace)
+                max_retries, trace, lane_mask=lane_mask)
         # one deferred row materialization for all p offsets — the
         # intermediate states are never observed, and the rows end up
-        # holding the bank's final (post-retry) time-shared occupant
-        write_accumulator_wave(bank, lay, acc_val)
+        # holding the bank's final (post-retry) time-shared occupant —
+        # under occupancy masking, the LAST ACTIVE lane's accumulator
+        write_accumulator_wave(bank, lay,
+                               acc_val if lane_mask is None
+                               else acc_val[lane_mask])
         outs = (acc_val[:, :, staged.slot_cols]
                 .reshape(B, T, staged.m_per_tile, staged.q)
                 << q_shift).sum(axis=-1)                       # (B, T, m_per)
@@ -1056,7 +1105,8 @@ def mvdram_gemv_batched(aq: QuantizedTensor, wq: QuantizedTensor,
                         templates: Optional[CommandTemplates] = None,
                         staged: Optional[StagedWaves] = None,
                         fault: Optional[FaultSession] = None,
-                        max_retries: int = 0):
+                        max_retries: int = 0,
+                        lane_mask: Optional[np.ndarray] = None):
     """B GeMVs against one resident matrix, executed in SHARED waves.
 
     `aq.values` is (B, N) activation codes with per-request scales (B, 1) —
@@ -1081,6 +1131,13 @@ def mvdram_gemv_batched(aq: QuantizedTensor, wq: QuantizedTensor,
     `fault` (a `faults.FaultSession`) runs the launch under fault
     injection with ABFT verification and up to `max_retries` wave-segment
     re-executions; the observations land in `report.fault`.
+
+    `lane_mask` (B,) bool executes the launch at CAPACITY B with only the
+    masked-true lanes occupied: masked lanes' codes/popcounts are zeroed
+    before they reach the device, the bank ledgers are armed with the mask
+    (masked lanes bill exactly zero ops, broadcast statics included), and
+    their output rows come back zero — active lanes stay bit-identical to
+    a compacted launch of just those lanes (tested).
     """
     a_u = np.asarray(aq.values, dtype=np.uint32)
     if a_u.ndim != 2:
@@ -1102,6 +1159,18 @@ def mvdram_gemv_batched(aq: QuantizedTensor, wq: QuantizedTensor,
     # batch (the command TEMPLATES are shared — only selections differ).
     codes, popc, zero_adds, skipped_b, r_bits = _chunk_arrays_batched(
         a_u, n, n_sub, p, sparsity, templates)
+    lane_mask = _lane_mask_arg(lane_mask, B)
+    if lane_mask is not None:
+        # masked lanes select nothing: zero codes make the ABFT expectation
+        # (codes·checksum) zero to match the zero accumulator, and zero
+        # popcounts bill zero add templates
+        off = ~lane_mask
+        for ci in range(len(codes)):
+            codes[ci][off] = 0.0
+            popc[ci][off] = 0
+            if zero_adds[ci] is not None:
+                zero_adds[ci][off] = 0
+        skipped_b = skipped_b * lane_mask
 
     resident = staged is not None
     if resident:
@@ -1112,7 +1181,7 @@ def mvdram_gemv_batched(aq: QuantizedTensor, wq: QuantizedTensor,
     trace = FaultTrace() if fault is not None else None
     partials, rt_arrs = _execute_staged(staged, codes, popc, zero_adds, B,
                                         fault=fault, max_retries=max_retries,
-                                        trace=trace)
+                                        trace=trace, lane_mask=lane_mask)
     # Resident launches stage nothing: the placement already paid the
     # preload (recorded in `StagedWaves.preload` / `Placement.staged`).
     pre_arr = (np.zeros_like(staged.preload) if resident
@@ -1122,6 +1191,10 @@ def mvdram_gemv_batched(aq: QuantizedTensor, wq: QuantizedTensor,
 
     out = _aggregate_host(partials, a_u, w_u, aq, wq, n_chunks, n_sub, gs, g)
     out = out * np.asarray(aq.scale, dtype=np.float64).reshape(B, 1)
+    if lane_mask is not None:
+        # the host-side zero-point correction sees the masked lanes' raw
+        # activations — their rows are contractually zero, not garbage
+        out[~lane_mask] = 0.0
     return out.astype(np.float32), report
 
 
@@ -1282,6 +1355,11 @@ class FusedProgram:
     waves: list                # (W,) FusedWave
     checksum: np.ndarray = None   # (S, n_pad) ABFT column-sum row per slot
     bank_keys: np.ndarray = None  # (S, 2) (channel, bank) home per slot
+    # Lane CAPACITY the program serves (None = unmasked fixed-B legacy):
+    # a capacity program always executes at B == b_max, with the per-tick
+    # occupancy carried by `execute_program(lane_mask=…)` — lanes join and
+    # leave with zero re-staging and zero recompilation.
+    b_max: Optional[int] = None
 
     @property
     def layers(self) -> int:
@@ -1292,14 +1370,21 @@ class FusedProgram:
         return self.sched.tiles
 
 
-def stage_program(stageds, sched: ProgramSchedule) -> FusedProgram:
+def stage_program(stageds, sched: ProgramSchedule,
+                  b_max: Optional[int] = None) -> FusedProgram:
     """Index L layers' resident staged rows into one wave-major plan.
 
     No weight row is copied INTO the device here — `matrix` gathers the
     float32 execution-side blocks the per-layer staging already built (the
     same blocks the layer-major path matmuls against), zero-padded to the
     program's deepest reduction chunk so one batched step spans layouts.
+
+    `b_max` declares the lane CAPACITY the program serves: every execution
+    must then launch exactly `b_max` lanes, with per-tick occupancy
+    expressed through `execute_program(lane_mask=…)`.
     """
+    if b_max is not None and (not isinstance(b_max, int) or b_max < 1):
+        raise ValueError(f"b_max must be a positive int, got {b_max!r}")
     stageds = tuple(stageds)
     if len(stageds) != sched.layers:
         raise ValueError(
@@ -1404,7 +1489,7 @@ def stage_program(stageds, sched: ProgramSchedule) -> FusedProgram:
                         # resident rows (zero on the n_pad padding, so the
                         # padded code gather contributes nothing)
                         checksum=matrix.sum(axis=-1).astype(np.int64),
-                        bank_keys=bank_keys)
+                        bank_keys=bank_keys, b_max=b_max)
 
 
 @dataclasses.dataclass
@@ -1439,7 +1524,8 @@ def _verify_and_retry_wave(plan: FusedProgram, wv: FusedWave,
                            codes_w: np.ndarray, acc: np.ndarray,
                            counts_all: np.ndarray, fault: FaultSession,
                            max_retries: int, trace: FaultTrace,
-                           retry_wave_ops: list) -> np.ndarray:
+                           retry_wave_ops: list,
+                           lane_mask=None) -> np.ndarray:
     """Inject + ABFT-verify + bounded re-execution of one FUSED wave.
 
     Same contract as `_verify_and_retry_group`, at fused-wave granularity:
@@ -1453,7 +1539,7 @@ def _verify_and_retry_wave(plan: FusedProgram, wv: FusedWave,
     lo, hi = wv.lo, wv.hi
     expected = (codes_w.astype(np.int64)
                 * plan.checksum[None, lo:hi]).sum(axis=-1)     # (B, T)
-    corrupted = fault.corrupt_accumulator(acc, plan.bank_keys[lo:hi])
+    corrupted = _corrupt_active(fault, acc, plan.bank_keys[lo:hi], lane_mask)
     detected = expected != acc.sum(axis=2)
     trace.corrupted += int(corrupted.sum())
     trace.detected += int((detected & corrupted).sum())
@@ -1467,7 +1553,7 @@ def _verify_and_retry_wave(plan: FusedProgram, wv: FusedWave,
         acc_new = np.matmul(codes_w.transpose(1, 0, 2),
                             plan.matrix[lo:hi]).astype(np.int64)
         acc_new = acc_new.transpose(1, 0, 2) & plan.mask_r[lo:hi]
-        fault.corrupt_accumulator(acc_new, plan.bank_keys[lo:hi])
+        _corrupt_active(fault, acc_new, plan.bank_keys[lo:hi], lane_mask)
         det_new = expected != acc_new.sum(axis=2)
         fix = detected & ~det_new
         acc[fix] = acc_new[fix]
@@ -1492,7 +1578,9 @@ def _verify_and_retry_wave(plan: FusedProgram, wv: FusedWave,
 def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
                     sparsity: bool = True,
                     fault: Optional[FaultSession] = None,
-                    max_retries: int = 0) -> ProgramRunResult:
+                    max_retries: int = 0,
+                    lane_mask: Optional[np.ndarray] = None
+                    ) -> ProgramRunResult:
     """One decode step, wave-major: encode every layer's (B, N_l) lane batch
     once, then walk the fused schedule's waves — each wave ONE batched step
     (padded code gather → one BLAS matmul across all member tiles, even
@@ -1512,6 +1600,18 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
     (request, layer, tile) cells land in the returned `fault` trace for
     the engine's quarantine/degrade escalation. With `fault=None` the path
     is bit-identical to the pre-fault executor.
+
+    `lane_mask` (B,) bool runs the CAPACITY program at partial occupancy:
+    the launch still carries B == `plan.b_max` lanes, but masked lanes'
+    codes and popcounts are zeroed before the wave walk (so their ABFT
+    expectation and accumulator are both zero — verification reconciles
+    with no special cases), the resident ledgers are armed with the mask
+    (masked lanes bill exactly zero ops, broadcast statics included, so
+    `wave_max` and `price_program` see only the occupied lanes), fault
+    injection draws only over active lanes, and masked output rows come
+    back zero. Active lanes are bit-identical — outputs AND per-(request,
+    tile) OpCounts — to a compacted fixed-B launch of just those lanes
+    (property-tested).
     """
     L = plan.layers
     if len(aqs) != L or len(wqs) != L:
@@ -1550,9 +1650,21 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
         skipped.append(sk)
         r_bits_l.append(rb)
 
+    if plan.b_max is not None and B != plan.b_max:
+        raise ValueError(
+            f"capacity program compiled for b_max={plan.b_max} lanes, "
+            f"launched with B={B} — run at capacity and express occupancy "
+            f"through lane_mask")
+    lane_mask = _lane_mask_arg(lane_mask, B)
+    if lane_mask is not None:
+        off = ~lane_mask
+        codes_g[off] = 0.0
+        popc_g[off] = 0
+        skipped = [sk * lane_mask for sk in skipped]
+
     for st in plan.stageds:
         for g in st.groups:
-            g.bank.set_batch(B)
+            g.bank.set_batch(B, lane_mask)
 
     # Heterogeneous per-tile charges for the WHOLE program in two einsums:
     # each slot's own clear/readout/aggregation statics + its own
@@ -1567,11 +1679,20 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
     m3 = np.einsum("bsk,sk->bs", popc_s, plan.add_m3)
     counts_all[..., _M3_I] += m3
     counts_all[..., _M5_I] += m3
+    if lane_mask is not None:
+        # masked lanes execute nothing: zero their command rows so the
+        # executed wave maxima, ledger charges and retry serializations
+        # all price ONLY the occupied lanes
+        counts_all = counts_all * lane_mask[:, None, None]
     wave_lo = np.asarray([wv.lo for wv in plan.waves], dtype=np.int64)
     wave_max = np.maximum.reduceat(counts_all.sum(axis=0), wave_lo, axis=0)
 
     trace = FaultTrace() if fault is not None else None
     retry_wave_ops: list = []
+    # the rows end up holding the bank's final time-shared occupant — the
+    # last ACTIVE lane under occupancy masking
+    last_lane = (-1 if lane_mask is None
+                 else int(np.nonzero(lane_mask)[0][-1]))
     partials_flat = np.zeros((B, int(plan.out0[-1])), dtype=np.int64)
     for wv in plan.waves:
         lo, hi = wv.lo, wv.hi
@@ -1585,7 +1706,8 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
         if fault is not None:
             acc = _verify_and_retry_wave(plan, wv, codes_w, acc, counts_all,
                                          fault, max_retries, trace,
-                                         retry_wave_ops)
+                                         retry_wave_ops,
+                                         lane_mask=lane_mask)
         # readout: every tile's own slot columns and q shifts
         ti = np.arange(hi - lo)
         vals = (acc[:, ti[:, None, None], plan.colidx[lo:hi]]
@@ -1599,7 +1721,8 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
             seg.group.bank.charge_counts(
                 counts_all[:, lo + seg.lo:lo + seg.hi], tiles=seg.pos)
             write_accumulator_wave(seg.group.bank, seg.group.lay,
-                                   acc[-1, seg.lo:seg.hi], tiles=seg.pos)
+                                   acc[last_lane, seg.lo:seg.hi],
+                                   tiles=seg.pos)
 
     rt_arrs, outs = [], []
     for l, (st, aq, wq) in enumerate(zip(plan.stageds, aqs, wqs)):
@@ -1614,6 +1737,10 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
         out = _aggregate_host(part, a_us[l], w_u, aq, wq, n_chunks, n_sub,
                               gs, grp)
         out = out * np.asarray(aq.scale, dtype=np.float64).reshape(B, 1)
+        if lane_mask is not None:
+            # the host zero-point correction sees masked lanes' raw
+            # activations — their rows are contractually zero
+            out[~lane_mask] = 0.0
         outs.append(out.astype(np.float32))
     return ProgramRunResult(outs=outs, rt_arrs=rt_arrs, skipped=skipped,
                             r_bits=r_bits_l, wave_max=wave_max,

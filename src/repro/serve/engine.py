@@ -99,7 +99,7 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, max_seq: int = 512,
                  batch_slots: int = 4, quantized: bool = False,
                  act_bits: Optional[int] = None, impl=None,
-                 mesh=None, rules=None):
+                 mesh=None, rules=None, kv_bits: Optional[int] = None):
         self.cfg = cfg
         self.mesh, self.rules = mesh, rules
         self.max_seq = max_seq
@@ -125,11 +125,12 @@ class ServeEngine:
                                       backend=backends.get_backend(impl))
         self.params = params
         self.model = Model(cfg, act_bits=act_bits if quantized else None,
-                           impl=model_impl)
+                           impl=model_impl, kv_bits=kv_bits)
         self._prefill = jax.jit(partial(self.model.prefill,
                                         max_seq=max_seq))
         self._step = jax.jit(make_serve_step(self.model))
         self._decode_fns: dict = {}
+        self._tick_price_cache: dict = {}
 
     def _place_model(self, qparams, act_bits: Optional[int]
                      ) -> Optional[GemvProgram]:
@@ -216,7 +217,10 @@ class ServeEngine:
                              if (stage, idx, p) in index]
             used.update(group)
             groups.append(group)
-        return self.mvdram.compile(names, groups=groups)
+        # CAPACITY program: every tick launches all `slots` lanes and the
+        # scheduler's occupancy rides in as run(lane_mask=…) — lanes
+        # join/leave across ticks with zero recompilation and re-staging
+        return self.mvdram.compile(names, groups=groups, b_max=self.slots)
 
     def price_decode_step(self, bit_density: float = 0.5,
                           batch: Optional[int] = None) -> Optional[dict]:
@@ -228,6 +232,28 @@ class ServeEngine:
         cost = self.decode_program.price(bit_density=bit_density,
                                          batch=batch or self.slots)
         return cost.asdict()
+
+    def decode_tick_cost_s(self, occupancy: int,
+                           bit_density: float = 0.5) -> Optional[float]:
+        """Priced DDR4 seconds of ONE decode tick of the resident program
+        at the given lane occupancy — what a traffic simulator advances its
+        clock by per tick. Cached per occupancy (the analytic price is a
+        pure function of the compiled schedule and the lane count, so a
+        long Poisson horizon prices from ≤ `slots` distinct entries).
+        None for unquantized engines."""
+        if self.decode_program is None:
+            return None
+        if not isinstance(occupancy, int) or not \
+                (1 <= occupancy <= self.slots):
+            raise ValueError(
+                f"occupancy must be an int in [1, {self.slots}] "
+                f"(the compiled lane capacity), got {occupancy!r}")
+        key = (occupancy, bit_density)
+        if key not in self._tick_price_cache:
+            cost = self.decode_program.price(bit_density=bit_density,
+                                             batch=occupancy)
+            self._tick_price_cache[key] = cost.t_total
+        return self._tick_price_cache[key]
 
     def residency_stats(self) -> Optional[dict]:
         """The engine's pool/fault counters plus the serving-level fallback
@@ -290,7 +316,10 @@ class ServeEngine:
         single-executable decode, applied identically on the loop
         oracle."""
         b, s0 = prompts.shape
-        assert b <= self.slots
+        if b > self.slots:
+            raise ValueError(
+                f"prompts batch {b} exceeds the engine's {self.slots} "
+                f"lanes (prompts shape {tuple(prompts.shape)})")
         if s0 + max_new > self.max_seq:
             raise ValueError(
                 f"prompt ({s0}) + max_new ({max_new}) exceeds the cache "

@@ -253,3 +253,153 @@ def test_executed_pricing_input_validation(rng):
     if rep2.waves != prog.sched.waves:
         with pytest.raises(ValueError, match="does not match"):
             eng.price_program(prog, batch=B, executed=rep2)
+
+
+# ---------------------------------------------------------------------------
+# Batch-capacity masking (ISSUE 7): ONE compiled program serves varying lane
+# occupancy across decode ticks — zero recompilation, zero re-staging, and
+# occupancy-masked execution bit-identical per active lane to the fixed-B
+# oracle, OpCounts and priced costs reconciling.
+# ---------------------------------------------------------------------------
+
+
+def _random_mask(mrng, B):
+    mask = mrng.random(B) < 0.5
+    if not mask.any():
+        mask[int(mrng.integers(0, B))] = True
+    return mask
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10**6), layers=st.integers(1, 3),
+       B=st.integers(2, 6), mask_seed=st.integers(0, 10**6),
+       layer_major=st.booleans())
+def test_masked_capacity_program_matches_compacted_oracle(
+        seed, layers, B, mask_seed, layer_major):
+    """A capacity program executed at B_max with a lane mask is, on every
+    ACTIVE lane, bit-identical — outputs AND per-(request, tile) runtime
+    OpCounts — to a compacted fixed-B launch of just those lanes, while
+    masked lanes return zero rows and bill exactly zero ops (broadcast
+    ledger statics included). Holds on the fused wave-major path and the
+    layer-major oracle alike."""
+    rng = np.random.default_rng(seed)
+    eng, hs, _ = _random_block(rng, layers)
+    prog = eng.compile(hs, b_max=B)
+    mask = _random_mask(np.random.default_rng(mask_seed), B)
+    X = [jnp.asarray(rng.normal(size=(B, h.plan.n)), jnp.float32)
+         for h in hs]
+    outs_m, rep_m = prog.run(X, lane_mask=mask, layer_major=layer_major)
+    prog_c = eng.compile(hs)
+    outs_c, rep_c = prog_c.run([x[mask] for x in X],
+                               layer_major=layer_major)
+    n_act = int(mask.sum())
+    assert rep_m.batch == n_act and rep_m.lanes == B
+    for l, (om, oc) in enumerate(zip(outs_m, outs_c)):
+        om, oc = np.asarray(om), np.asarray(oc)
+        np.testing.assert_array_equal(om[mask], oc,
+                                      err_msg=f"layer {l} active lanes")
+        assert (om[~mask] == 0).all(), f"layer {l} masked rows not zero"
+    for l, (rm, rc) in enumerate(zip(rep_m.reports, rep_c.reports)):
+        active = [r for r, keep in zip(rm.requests, mask) if keep]
+        idle = [r for r, keep in zip(rm.requests, mask) if not keep]
+        for b, (ra, rb) in enumerate(zip(active, rc.requests)):
+            assert [c.asdict() for c in ra.tile_runtime] \
+                == [c.asdict() for c in rb.tile_runtime], \
+                f"layer {l} active lane {b} per-tile OpCounts"
+            assert ra.skipped_bits == rb.skipped_bits
+        for r in idle:
+            assert r.runtime.pud_ops == 0 \
+                and r.runtime.host_bits_read == 0 \
+                and r.runtime.host_bits_written == 0 \
+                and r.runtime.host_int_ops == 0, \
+                f"layer {l}: masked lane billed ops"
+            assert r.skipped_bits == 0
+        # the B-summed batch serialization sees only the occupied lanes
+        assert rm.runtime.asdict() == rc.runtime.asdict()
+    if not layer_major:
+        assert rep_m.executed_wave_ops == rep_c.executed_wave_ops
+        cost_m = eng.price_program(prog, batch=n_act, executed=rep_m)
+        cost_c = eng.price_program(prog_c, batch=n_act, executed=rep_c)
+        assert cost_m.asdict() == cost_c.asdict()
+
+
+def test_masked_program_zero_restaging_across_occupancy_changes(rng):
+    """Lanes join and leave across decode ticks: the SAME FusedProgram
+    object (no recompilation) and the SAME resident StagedWaves (no
+    re-staging) serve every occupancy; every tick reports resident
+    execution with zero repeated weight staging."""
+    eng, hs, _ = _random_block(np.random.default_rng(31), 2)
+    B = 4
+    prog = eng.compile(hs, b_max=B)
+    X = [jnp.asarray(rng.normal(size=(B, h.plan.n)), jnp.float32)
+         for h in hs]
+    masks = [np.array(m) for m in
+             ([True] * 4, [True, False, True, False],
+              [False, False, False, True], [True, True, True, False])]
+    fused_ids, staged_ids = set(), set()
+    for mask in masks:
+        _outs, rep = prog.run(X, lane_mask=mask)
+        fused_ids.add(id(prog._fused))
+        staged_ids.add(tuple(id(s) for s in prog._fused_staged))
+        assert rep.batch == int(mask.sum()) and rep.lanes == B
+        assert rep.repeated_staging.host_bits_written == 0
+        for r in rep.reports:
+            assert r.resident
+    assert len(fused_ids) == 1, "occupancy change re-staged the plan"
+    assert len(staged_ids) == 1, "occupancy change re-staged resident rows"
+
+
+def test_capacity_program_input_validation(rng):
+    eng, hs, _ = _random_block(np.random.default_rng(37), 2)
+    prog = eng.compile(hs, b_max=3)
+    assert prog.b_max == 3
+    X3 = [jnp.zeros((3, h.plan.n), jnp.float32) for h in hs]
+    # a capacity program refuses off-capacity launches: occupancy is the
+    # mask's job, not the batch axis's
+    with pytest.raises(ValueError, match="b_max=3"):
+        prog.run([x[:2] for x in X3])
+    # an all-masked tick has nothing to execute
+    with pytest.raises(ValueError, match="no active lanes"):
+        prog.run(X3, lane_mask=np.zeros(3, bool))
+    # mask shape must match the launch capacity
+    with pytest.raises(ValueError, match="lane_mask shape"):
+        prog.run(X3, lane_mask=np.ones(4, bool))
+    with pytest.raises(ValueError, match="b_max"):
+        eng.compile(hs, b_max=0)
+
+
+def test_masked_fault_injection_draws_only_active_lanes(rng):
+    """Under fault injection a masked lane executes nothing physically, so
+    it must never see an injected flip (its zero ABFT expectation would
+    flag a ghost and burn retries): the masked run's fault draws, retries
+    and retry billing are IDENTICAL to the compacted oracle's."""
+    from repro.core.pud.faults import FaultModel, FaultPolicy
+
+    def build(b_max=None):
+        eng = MVDRAMEngine(geom=GEOM,
+                           fault_model=FaultModel(transient_ber=5e-2,
+                                                  seed=11),
+                           fault_policy=FaultPolicy(max_wave_retries=4))
+        wrng = np.random.default_rng(9)
+        hs = [eng.register(f"l{i}",
+                           jnp.asarray(wrng.normal(size=(32, 16)),
+                                       jnp.float32),
+                           QuantSpec(bits=3), a_spec=QuantSpec(bits=2))
+              for i in range(2)]
+        return eng, eng.compile(hs, b_max=b_max)
+
+    eng_m, prog_m = build(b_max=3)
+    eng_c, prog_c = build()
+    X = [jnp.asarray(np.random.default_rng(3).normal(size=(3, 32)),
+                     jnp.float32) for _ in range(2)]
+    mask = np.array([True, False, True])
+    outs_m, rep_m = prog_m.run(X, lane_mask=mask)
+    outs_c, rep_c = prog_c.run([x[mask] for x in X])
+    for om, oc in zip(outs_m, outs_c):
+        om, oc = np.asarray(om), np.asarray(oc)
+        np.testing.assert_array_equal(om[mask], oc)
+        assert (om[~mask] == 0).all()
+    assert rep_m.fault.corrupted == rep_c.fault.corrupted > 0
+    assert rep_m.fault.detected == rep_c.fault.detected
+    assert rep_m.fault.retries == rep_c.fault.retries
+    assert rep_m.retry_wave_ops == rep_c.retry_wave_ops

@@ -88,3 +88,112 @@ def test_random_admission_pattern_property():
     assert len(done) == len(reqs)
     for r in done:
         assert r.out == solo[r.rid], (r.rid, r.out, solo[r.rid])
+
+
+# ---------------------------------------------------------------------------
+# Serve-path bug sweep (ISSUE 7)
+# ---------------------------------------------------------------------------
+
+
+def _tiny_batcher(arch="llama2-7b", **kw):
+    cfg = dataclasses.replace(tiny_config(arch), dtype="float32")
+    params = init_params(param_defs(cfg), KEY)
+    return ContinuousBatcher(cfg, params, **kw)
+
+
+def test_submit_rejects_oversized_prompt():
+    """A request whose prompt + max_new overruns the usable horizon used to
+    be ACCEPTED and then silently truncated mid-prefill (marked done before
+    the prompt was fully fed). It must be rejected at submit() with the
+    numbers in the message."""
+    b = _tiny_batcher(max_seq=16, lanes=1)
+    with pytest.raises(ValueError, match=r"14 tokens.*max_new \(4\).*15"):
+        b.submit(Request(rid=7, prompt=list(range(14)), max_new=4))
+    assert b.pending == 0
+    # the largest request that fits is accepted and completes fully
+    b.submit(Request(rid=8, prompt=list(range(11)), max_new=4))
+    (done,) = b.run()
+    assert done.done and len(done.out) == 4
+
+
+def test_submit_rejects_empty_prompt():
+    b = _tiny_batcher(max_seq=16, lanes=1)
+    with pytest.raises(ValueError, match="empty prompt"):
+        b.submit(Request(rid=3, prompt=[], max_new=2))
+    with pytest.raises(ValueError, match="max_new"):
+        b.submit(Request(rid=4, prompt=[1, 2], max_new=0))
+    assert b.pending == 0
+
+
+def test_run_returns_starved_requests():
+    """run(max_ticks) used to silently drop whatever was still queued or
+    in flight; now every submitted request comes back, starved ones flagged
+    done=False, and the pending/in_flight counters expose the backlog."""
+    b = _tiny_batcher(max_seq=32, lanes=1)
+    for i in range(3):
+        b.submit(Request(rid=i, prompt=[1, 2, 3, 4], max_new=6))
+    assert b.pending == 3 and b.in_flight == 0
+    out = b.run(max_ticks=2)
+    assert {r.rid for r in out} == {0, 1, 2}
+    assert not any(r.done for r in out)
+    assert b.in_flight == 1 and b.pending == 2
+    # resuming the same batcher drains the backlog to completion
+    out = b.run()
+    assert all(r.done for r in out) and len(out) == 3
+    assert b.pending == 0 and b.in_flight == 0
+
+
+@pytest.mark.parametrize("arch", ["llama2-7b", "mamba2-1.3b"])
+def test_batcher_matches_generate_at_full_occupancy(arch):
+    """Token-for-token greedy parity: the batcher driving the SAME engine
+    as a fixed-batch ServeEngine.generate call produces identical tokens
+    at full occupancy."""
+    from repro.serve.engine import ServeEngine
+
+    cfg = dataclasses.replace(tiny_config(arch), dtype="float32")
+    params = init_params(param_defs(cfg), KEY)
+    rng = np.random.default_rng(5)
+    s0, max_new = 6, 5
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab_size, size=(2, s0)))
+    eng = ServeEngine(cfg, params, max_seq=48, batch_slots=2)
+    toks = np.asarray(eng.generate(prompts, max_new=max_new))
+    b = ContinuousBatcher(cfg, params, engine=eng)
+    for i in range(2):
+        b.submit(Request(rid=i, prompt=np.asarray(prompts[i]).tolist(),
+                         max_new=max_new))
+    by = {r.rid: r.out for r in b.run()}
+    for i in range(2):
+        assert by[i] == toks[i, s0:].tolist(), (i, by[i], toks[i, s0:])
+
+
+def test_prefill_chunk_invariance():
+    """Chunked prefill is an execution schedule, not a semantic knob: any
+    chunk size yields identical outputs."""
+    cfg = dataclasses.replace(tiny_config("llama2-7b"), dtype="float32")
+    params = init_params(param_defs(cfg), KEY)
+    rng = np.random.default_rng(9)
+    reqs = [(rng.integers(0, cfg.vocab_size, size=n).tolist(), m)
+            for n, m in ((9, 3), (4, 5), (13, 2))]
+    outs = []
+    for chunk in (1, 4, 8):
+        b = ContinuousBatcher(cfg, params, max_seq=32, lanes=2,
+                              prefill_chunk=chunk)
+        for i, (p, m) in enumerate(reqs):
+            b.submit(Request(rid=i, prompt=p, max_new=m))
+        outs.append({r.rid: r.out for r in b.run()})
+    assert outs[0] == outs[1] == outs[2]
+
+
+def test_no_bare_assert_in_serve():
+    """Serve-path input validation must raise ValueError with shapes, not
+    bare asserts that vanish under -O (PR 6 policy, extended to serve/)."""
+    import pathlib
+    import re
+
+    serve = (pathlib.Path(__file__).resolve().parent.parent
+             / "src" / "repro" / "serve")
+    banned = re.compile(r"^\s*assert\b", re.MULTILINE)
+    offenders = [p.name for p in sorted(serve.glob("*.py"))
+                 if banned.search(p.read_text())]
+    assert not offenders, \
+        f"bare assert in serve/ — raise ValueError with shapes: {offenders}"

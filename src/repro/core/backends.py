@@ -8,6 +8,13 @@ behind a small protocol:
 
   `Backend.gemv(engine, handle, a, **opts)`   one registered GeMV
   `Backend.linear(engine, x, w, act_bits)`    one serving linear
+  `Backend.linear_group(engine, x, ws, b)`    k linears sharing one input
+                                              (q/k/v, up/gate) — Pallas
+                                              fuses them into one launch
+  `Backend.run_program(engine, prog, xs)`     a compiled GemvProgram decode
+                                              block — Pallas: one fused
+                                              launch; sim: the fused wave
+                                              schedule; default: per-leaf
   `Backend.kernel_impl`                       the kernel-registry impl
                                               string this backend lowers to
 
@@ -52,6 +59,27 @@ class Backend(abc.ABC):
                 x, w, QuantSpec(bits=act_bits), impl=self.kernel_impl)
         return bp_ops.bitplane_gemv(x, w, impl=self.kernel_impl)
 
+    def linear_group(self, engine, x: jax.Array, ws: tuple,
+                     act_bits: Optional[int]) -> tuple:
+        """k serving linears sharing one input (q/k/v, up/gate). Default:
+        per-leaf `linear` calls — backends that can fuse them override."""
+        return tuple(self.linear(engine, x, w, act_bits) for w in ws)
+
+    def run_program(self, engine, program, activations, *,
+                    lane_mask=None, fidelity: str = "code"):
+        """Execute a compiled `GemvProgram` decode block; returns per-layer
+        outputs. Default: per-leaf linears — identical results, no fusion."""
+        import jax.numpy as jnp
+        outs = []
+        for h, x in zip(program.handles, activations):
+            program._check_layer(h)
+            out = self.linear(engine, jnp.asarray(x), h.weights,
+                              h.a_spec.bits)
+            if lane_mask is not None:
+                out = jnp.where(jnp.asarray(lane_mask)[:, None], out, 0)
+            outs.append(out)
+        return outs
+
     def __repr__(self):
         return f"<{type(self).__name__} {self.name!r}>"
 
@@ -93,6 +121,23 @@ class PallasBackend(Backend):
         return bp_ops.bitplane_gemv_bitserial(
             a, handle.weights, handle.a_spec, impl=self.kernel_impl,
             fidelity=fidelity)
+
+    def linear_group(self, engine, x, ws, act_bits):
+        """Fuse the group into ONE Pallas launch (program.py) — bit-exact
+        with the per-leaf path (padding-invariance algebra, tested)."""
+        if not act_bits or len(ws) < 2:
+            return super().linear_group(engine, x, ws, act_bits)
+        from ..kernels.bitplane_gemv import program as bp_program
+        return bp_program.fused_group_linears(
+            x, ws, act_bits,
+            interpret=(self.kernel_impl == "pallas_interpret"))
+
+    def run_program(self, engine, program, activations, *,
+                    lane_mask=None, fidelity: str = "code"):
+        """The program-aware path: one fused launch per decode block."""
+        return program.run_kernel(
+            activations, fidelity=fidelity, lane_mask=lane_mask,
+            interpret=(self.kernel_impl == "pallas_interpret"))
 
 
 class PallasInterpretBackend(PallasBackend):
@@ -153,6 +198,12 @@ class SimBackend(Backend):
                 "the sim audit route executes bit-serial command "
                 "streams — float-activation linears need act_bits")
         return engine.sim_linear(x, w, act_bits)
+
+    def run_program(self, engine, program, activations, *,
+                    lane_mask=None, fidelity: str = "code"):
+        """The simulator executes its own fused wave schedule."""
+        outs, _report = program.run(activations, lane_mask=lane_mask)
+        return outs
 
 
 # ---------------------------------------------------------------------------

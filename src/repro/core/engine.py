@@ -246,8 +246,11 @@ class GemvProgram:
         # zero re-staging as lanes join/leave
         self.b_max = b_max
         self.steps = 0
+        self.kernel_steps = 0       # decode blocks run via run_kernel()
         self._fused = None          # gemv.FusedProgram, built lazily
         self._fused_staged = None   # the StagedWaves the plan indexes
+        self._kernel_plan = None    # ProgramKernelPlan, built lazily
+        self._kernel_packed = None  # (planes_t, scale_t), packed once
 
     @property
     def layers(self) -> int:
@@ -396,6 +399,79 @@ class GemvProgram:
         outs = [o[0] if sq else o for o, sq in zip(outs, squeezes)]
         self.steps += 1
         return outs, report
+
+    def kernel_plan(self):
+        """The fused Pallas launch geometry for this program — the kernel-
+        side twin of the simulator's `ProgramSchedule`. Built once from the
+        handles' static shapes/bits/zero points and the SAME concurrency
+        groups the wave schedule fused, then cached; hashable, so it is a
+        jit static argument of the one-launch decode path."""
+        if self._kernel_plan is None:
+            from ..kernels.bitplane_gemv import program as bp_program
+            metas = []
+            for h in self.handles:
+                self._check_layer(h)
+                bw = h.weights
+                metas.append((bw.n, bw.m, bw.bits, bw.scale.shape[0],
+                              bw.zero, h.a_spec.bits,
+                              bp_program.static_zero(h.a_spec)))
+            self._kernel_plan = bp_program.build_plan(tuple(metas),
+                                                      self.groups)
+        return self._kernel_plan
+
+    def run_kernel(self, activations: Sequence[jax.Array],
+                   fidelity: str = "code",
+                   lane_mask: Optional[np.ndarray] = None,
+                   interpret: Optional[bool] = None) -> list:
+        """Execute one decode step as ONE fused Pallas launch walking the
+        program's schedule — the jit-path twin of `run`. activations[l] is
+        layer l's (B, N_l) lane batch (or (N_l,), promoted to B=1; B must
+        equal `b_max` for a capacity program). Returns per-layer (B, M_l)
+        outputs integer-identical to per-leaf `bitplane_gemv_bitserial`
+        calls; masked lanes return zero rows, like `run(lane_mask=…)`.
+        `interpret=None` auto-selects interpret mode off-TPU."""
+        import jax.numpy as jnp
+        from ..kernels.bitplane_gemv import program as bp_program
+        if len(activations) != self.layers:
+            raise ValueError(
+                f"{len(activations)} activations for a {self.layers}-layer "
+                f"program")
+        xs, squeezes = [], []
+        for h, x in zip(self.handles, activations):
+            self._check_layer(h)
+            x = jnp.asarray(x)
+            squeeze = x.ndim == 1
+            if squeeze:
+                x = x[None, :]
+            if x.shape[-1] != h.weights.n:
+                raise ValueError(
+                    f"layer {h.name!r} expects (..., {h.weights.n}) "
+                    f"activations, got shape {tuple(x.shape)}")
+            xs.append(x)
+            squeezes.append(squeeze)
+        b = xs[0].shape[0] if xs else 1
+        if self.b_max is not None and b != self.b_max:
+            raise ValueError(
+                f"capacity program launches exactly b_max={self.b_max} "
+                f"lanes, got B={b}; mask idle lanes with lane_mask")
+        lane_mask = _lane_mask_arg(lane_mask, b)
+        if interpret is None:
+            interpret = jax.default_backend() != "tpu"
+        plan = self.kernel_plan()
+        if self._kernel_packed is None:
+            # weights are static per program: pack the slot-major plane/
+            # scale tensors ONCE, so every decode step ships codes only
+            self._kernel_packed = bp_program.pack_weights(
+                plan, tuple(h.weights for h in self.handles))
+        outs = bp_program.run_program(
+            plan, tuple(h.weights for h in self.handles), tuple(xs),
+            tuple(h.a_spec for h in self.handles), fidelity=fidelity,
+            interpret=bool(interpret), packed=self._kernel_packed)
+        if lane_mask is not None:
+            keep = jnp.asarray(lane_mask)[:, None]
+            outs = [jnp.where(keep, o, 0) for o in outs]
+        self.kernel_steps += 1
+        return [o[0] if sq else o for o, sq in zip(outs, squeezes)]
 
     def price(self, bit_density: float = 0.5, batch: int = 1,
               usable_cols: Optional[int] = None,
@@ -724,6 +800,18 @@ class MVDRAMEngine:
         self.routed_linears += 1
         return _backends.resolve(backend, mode).linear(self, x, w, act_bits)
 
+    def linear_group(self, x: jax.Array, ws: Sequence[BitplaneWeights],
+                     act_bits: Optional[int] = None,
+                     backend: Union[Backend, str, None] = None,
+                     mode: Optional[str] = None) -> tuple:
+        """k independent serving linears sharing ONE input (q/k/v, up/gate)
+        — the serve-side mirror of a program's concurrency groups. The
+        Pallas backends fuse the group into a single launch; every other
+        backend falls back to per-leaf `linear` with identical results."""
+        self.routed_linears += len(ws)
+        return _backends.resolve(backend, mode).linear_group(
+            self, x, tuple(ws), act_bits)
+
     def sim_linear(self, x: jax.Array, w: BitplaneWeights,
                    act_bits: int) -> jax.Array:
         """The sim backend's audit route: resolve (or lazily place) the
@@ -930,3 +1018,10 @@ class EngineLinear:
                  act_bits: Optional[int] = None) -> jax.Array:
         return self.engine.linear(x, w, act_bits=act_bits,
                                   backend=self.backend)
+
+    def group(self, x: jax.Array, ws: Sequence[BitplaneWeights],
+              act_bits: Optional[int] = None) -> tuple:
+        """The grouped-linear hook `models.layers.dense_group` probes for:
+        q/k/v (and up/gate) fuse into one launch on Pallas backends."""
+        return self.engine.linear_group(x, ws, act_bits=act_bits,
+                                        backend=self.backend)

@@ -1,3 +1,8 @@
 """Bit-plane GeMV — the TPU-native realization of MVDRAM's horizontal
-matrix layout (packed weight bit-planes in HBM, unpack + MAC in VMEM)."""
+matrix layout (packed weight bit-planes in HBM, unpack + MAC in VMEM).
+
+`program` holds the fused whole-block decode kernel: one Pallas launch
+walks every layer of a compiled `GemvProgram` in concurrency-group order."""
 from .ops import bitplane_gemv, bitplane_gemv_bitserial
+from .program import (ProgramKernelPlan, build_plan, fused_group_linears,
+                      run_program)

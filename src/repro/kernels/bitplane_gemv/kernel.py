@@ -38,6 +38,10 @@ from jax.experimental import pallas as pl
 
 from ..compat import CompilerParams
 
+#: per-leaf pallas_call constructions (trace-time) — the contrast counter
+#: for the fused program path's one-launch-per-block assertion.
+LAUNCHES = 0
+
 
 def _unpack_words(words: jax.Array, bn: int) -> jax.Array:
     """(W, bm) uint32 → (W*32, bm) {0,1} int8; bit j of word w = row w*32+j."""
@@ -152,7 +156,12 @@ def gemv_bs_pallas(a_codes, planes, scale_tiles, *, q: int, p: int,
                    z_a: int, z_w: int, bn: int, bm: int,
                    fidelity: str = "code", interpret: bool = False):
     """a_codes (B, N) uint8 (pad with z_a); planes (q, N//32, M) uint32."""
-    assert fidelity in ("code", "bitserial"), fidelity
+    global LAUNCHES
+    if fidelity not in ("code", "bitserial"):
+        raise ValueError(
+            f"fidelity must be 'code' or 'bitserial', got {fidelity!r} "
+            f"(a_codes shape {tuple(a_codes.shape)})")
+    LAUNCHES += 1
     b, n = a_codes.shape
     m = planes.shape[-1]
     wpb = bn // 32

@@ -30,10 +30,17 @@ def _pick_blocks(n: int, m: int, bn: Optional[int], bm: Optional[int],
     bn = bn or min(DEFAULT_BN, n)
     bm = bm or min(DEFAULT_BM, m)
     if group_size and group_size > 0:
-        assert group_size % 32 == 0, "group size must be a multiple of 32"
+        if group_size % 32 != 0:
+            raise ValueError(
+                f"scale group size must be a multiple of 32 (the bit-plane "
+                f"word width), got group_size={group_size} for an "
+                f"(N={n}, M={m}) matrix")
         bn = min(bn, group_size)   # per-group scales stay tile-local
     bn = max(32, (bn // 32) * 32)
-    bm = max(128, (bm // 128) * 128) if m >= 128 else m
+    # bm stays a multiple of the 128-lane tile even when m < 128: callers
+    # pad planes/scales up to bm and slice out[:, :m], so a small output
+    # dim must never shrink the block into a misaligned Pallas grid
+    bm = max(128, (bm // 128) * 128)
     return bn, bm
 
 

@@ -78,7 +78,10 @@ def decode_attention_pallas(pos, q, k, v, kv_positions, k_scale, v_scale, *,
     KV heads must be pre-expanded to H (GQA repeat upstream)."""
     b, h, d = q.shape
     s = k.shape[1]
-    assert s % block == 0
+    if s % block != 0:
+        raise ValueError(
+            f"KV sequence length {s} must be a multiple of block={block} "
+            f"(k shape {tuple(k.shape)}); pad the cache upstream")
     blocks = s // block
     int8_kv = k.dtype == jnp.int8
     grid = (b, blocks)

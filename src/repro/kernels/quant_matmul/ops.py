@@ -52,7 +52,10 @@ def quant_matmul(a: jax.Array, wq: QuantizedTensor, *, impl: str = "jnp",
     g = wq.scale.shape[0]
     bn, bm = _pick_blocks(n, m, bn, bm, n // g if g > 1 else None)
     per = 32 // q
-    assert bn % per == 0
+    if bn % per != 0:
+        raise ValueError(
+            f"reduction block bn={bn} must be a multiple of the packing "
+            f"density 32//q={per} (q={q}, weight shape {(n, m)})")
     a2 = _pad_axis(a2, bn, 1)
     codes = pack_weight_codes(wq.values, q)                  # zero-padded N
     codes = _pad_axis(codes, bn // per, 0)

@@ -22,7 +22,8 @@ import jax.numpy as jnp
 
 from ..parallel.sharding import constrain
 from .config import AttnConfig, MLAConfig, ModelConfig
-from .layers import apply_rope, dense, rope_frequencies, softcap
+from .layers import (apply_rope, dense, dense_group, rope_frequencies,
+                     softcap)
 
 NEG_INF = -2.3819763e38  # ~ lowest bf16-representable; used pre-softmax
 
@@ -162,9 +163,12 @@ def gqa_forward(x, p, acfg: AttnConfig, window: Optional[int],
     """Full-sequence self-attention. x (B,S,E); positions (S,)."""
     b, s, _ = x.shape
     h, hkv, d = acfg.num_heads, acfg.num_kv_heads, acfg.head_dim
-    q = dense(x, p["wq"], p.get("bq"), act_bits, impl).reshape(b, s, h, d)
-    k = dense(x, p["wk"], p.get("bk"), act_bits, impl).reshape(b, s, hkv, d)
-    v = dense(x, p["wv"], p.get("bv"), act_bits, impl).reshape(b, s, hkv, d)
+    q, k, v = dense_group(x, (p["wq"], p["wk"], p["wv"]),
+                          (p.get("bq"), p.get("bk"), p.get("bv")),
+                          act_bits, impl)
+    q = q.reshape(b, s, h, d)
+    k = k.reshape(b, s, hkv, d)
+    v = v.reshape(b, s, hkv, d)
     q = constrain(q, "batch", "seq", "heads", None)
     k = constrain(k, "batch", "seq", "kv_heads", None)
     rd = acfg.rope_dim or d
@@ -202,9 +206,12 @@ def gqa_decode(x, p, acfg: AttnConfig, window: Optional[int], cache: dict,
     sc = cache["k"].shape[1]
     int8_kv = "k_scale" in cache
     pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))  # per-lane
-    q = dense(x, p["wq"], p.get("bq"), act_bits, impl).reshape(b, 1, h, d)
-    k = dense(x, p["wk"], p.get("bk"), act_bits, impl).reshape(b, 1, hkv, d)
-    v = dense(x, p["wv"], p.get("bv"), act_bits, impl).reshape(b, 1, hkv, d)
+    q, k, v = dense_group(x, (p["wq"], p["wk"], p["wv"]),
+                          (p.get("bq"), p.get("bk"), p.get("bv")),
+                          act_bits, impl)
+    q = q.reshape(b, 1, h, d)
+    k = k.reshape(b, 1, hkv, d)
+    v = v.reshape(b, 1, hkv, d)
     rd = acfg.rope_dim or d
     cos, sin = rope_frequencies(rd, acfg.rope_base, pos[:, None])  # (B,1,r/2)
     q = apply_rope(q, cos, sin, rd)

@@ -54,6 +54,25 @@ def dense(x: jax.Array, w, b: Optional[jax.Array] = None,
     return out
 
 
+def dense_group(x: jax.Array, ws, bs=None, act_bits: Optional[int] = None,
+                impl=None) -> tuple:
+    """k independent projections of ONE input — q/k/v, up/gate — the
+    grouped analogue of `dense`. An `impl` exposing a `.group` hook (an
+    `EngineLinear`: its Pallas backends fuse the group's BitplaneWeights
+    into ONE kernel launch, mirroring the compiled decode program's
+    concurrency groups) takes the fused path; anything else falls back to
+    per-leaf `dense` with identical results."""
+    ws = tuple(ws)
+    bs = tuple(bs) if bs is not None else (None,) * len(ws)
+    group = getattr(impl, "group", None)
+    if (group is not None and act_bits and len(ws) > 1
+            and all(isinstance(w, BitplaneWeights) for w in ws)):
+        outs = [o.astype(x.dtype) for o in group(x, ws, act_bits)]
+        return tuple(o if b is None else o + b.astype(o.dtype)
+                     for o, b in zip(outs, bs))
+    return tuple(dense(x, w, b, act_bits, impl) for w, b in zip(ws, bs))
+
+
 def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
             zero_centered: bool = True) -> jax.Array:
     """RMSNorm with (1+γ) parametrization (gemma/llama-compatible)."""
@@ -110,8 +129,8 @@ def apply_rope(x: jax.Array, cos: jax.Array, sin: jax.Array,
 def ffn(x: jax.Array, p, ffn_type: str, act_bits=None, impl=None):
     """GLU (SwiGLU/GeGLU) or classic 2-layer MLP."""
     if ffn_type == "glu":
-        up = dense(x, p["up"], act_bits=act_bits, impl=impl)
-        gate = dense(x, p["gate"], act_bits=act_bits, impl=impl)
+        up, gate = dense_group(x, (p["up"], p["gate"]), act_bits=act_bits,
+                               impl=impl)
         h = jax.nn.gelu(gate.astype(jnp.float32)).astype(x.dtype) * up
     else:
         h = dense(x, p["up"], p.get("up_b"), act_bits=act_bits, impl=impl)

@@ -21,12 +21,18 @@ gets a persistent (channel, bank, row-range) home; heterogeneous shapes
 co-reside), and the block's GeMV sequence is compiled into a
 `GemvProgram` whose fused wave schedule re-stages nothing across decode
 steps. Decode-time linears route through `core.engine.EngineLinear`
-(installed as the model's `impl`): the (lanes, N) decode activations
-execute as ONE batched GeMV launch per weight — the software analogue of
-the simulator's cross-request wave sharing — while `decode_program` /
-`price_decode_step()` expose the resident-decode accounting (zero
-repeated weight staging) and the sim-audit path executes against the same
-staged rows.
+(installed as the model's `impl`) and its GROUPED hook: the model's
+q/k/v and up/gate projections call `models.layers.dense_group`, so on a
+Pallas backend each concurrency group of `_CONCURRENT_LEAVES` fuses into
+ONE kernel launch (`kernels/bitplane_gemv/program.py` — the kernel-side
+twin of the compiled program's shared waves) instead of one launch per
+weight; other backends fall back per-leaf with identical results. The
+whole-block single-launch path is `GemvProgram.run_kernel` /
+`Backend.run_program` — one fused Pallas launch walks every layer of the
+decode block given its per-layer activations, integer-identical to the
+per-leaf path — while `decode_program` / `price_decode_step()` expose
+the resident-decode accounting (zero repeated weight staging) and the
+sim-audit path executes against the same staged rows.
 """
 from __future__ import annotations
 

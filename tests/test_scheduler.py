@@ -185,15 +185,17 @@ def test_prefill_chunk_invariance():
 
 
 def test_no_bare_assert_in_serve():
-    """Serve-path input validation must raise ValueError with shapes, not
-    bare asserts that vanish under -O (PR 6 policy, extended to serve/)."""
+    """Serve- and kernel-path input validation must raise ValueError with
+    shapes, not bare asserts that vanish under -O (PR 6 policy, extended
+    to serve/ and, since PR 8, the whole kernels/ tree)."""
     import pathlib
     import re
 
-    serve = (pathlib.Path(__file__).resolve().parent.parent
-             / "src" / "repro" / "serve")
+    root = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
     banned = re.compile(r"^\s*assert\b", re.MULTILINE)
-    offenders = [p.name for p in sorted(serve.glob("*.py"))
+    files = sorted(root.joinpath("serve").glob("*.py"))
+    files += sorted(root.joinpath("kernels").rglob("*.py"))
+    offenders = [str(p.relative_to(root)) for p in files
                  if banned.search(p.read_text())]
     assert not offenders, \
-        f"bare assert in serve/ — raise ValueError with shapes: {offenders}"
+        f"bare assert — raise ValueError with shapes: {offenders}"

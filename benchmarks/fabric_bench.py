@@ -1,0 +1,163 @@
+"""DRAM-fabric benchmark: multi-DIMM scale-out + spill-tier overhead.
+
+Two sections, both deterministic (analytically priced on the DDR4/CXL
+models — no wall-clock, so the rows are exactly reproducible):
+
+Scale-out — the 4-layer resident decode block (`sim_bench._resident_block`
+shapes: a q/k/v group of three 512×256 linears + a 256×512 down
+projection, q=4/p=2, B=2 lanes, banked geometry) compiled on a 2-DIMM and
+a 4-DIMM `FabricPool` vs the single-`DramPool` program. Outputs and the
+one-time staging totals must be bit-identical across all three (placement
+never affects results — only wave packing moves); the priced fabric step
+overlaps per-module parts on their own command buses (paper §VI scales
+across four DDR4 modules), so
+
+    sim.fabric_scaleout_speedup_x        single-pool t_total / 2-DIMM t_total
+    sim.fabric_scaleout_4dimm_speedup_x  single-pool t_total / 4-DIMM t_total
+
+are drop-gated AND the 2-DIMM row carries a hard ≥1.6× acceptance floor
+(deterministic price, so a plain assert even under --smoke).
+
+Spill tier — six (16, 8) layers on a fabric whose single module holds two:
+registration parks the cold four in the CXL capacity tier, the compiled
+`FabricProgram` demand-pages them each decode step (LRU thrash by
+construction), outputs stay bit-identical to a 4× bigger pool's oracle,
+and the paid restage traffic reconciles EXACTLY into the priced step
+(`ProgramCost.t_spill_restage == CxlModel.restage_time(bits, restages)`
+to the last bit, bits cross-checked against the pool ledger):
+
+    sim.fabric_spill_restage_overhead_x  t_total / (t_total − t_spill_restage)
+
+require-rows-guarded only (an overhead ratio, not a speedup — tracking it
+catches the restage price silently vanishing, but a smaller value is
+better hardware, not a regression).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import MVDRAMEngine
+from repro.core.pud.fabric import FabricPool
+from repro.core.pud.gemv import PudGeometry
+from repro.core.quant import QuantSpec
+
+# mirrors sim_bench: paper-representative shapes at banked geometry
+N, M = 512, 256
+BANKED = PudGeometry(subarray_cols=64, n_sub_max=32)
+B = 2
+
+# spill section: one subarray per bank + thin row budget → a module holds
+# exactly two (16, 8) q4 layers (34 resident rows each, 54-row banks)
+SPILL_GEOM = PudGeometry(subarray_rows=64, subarray_cols=32, n_sub_max=16,
+                         channels=1, banks_per_channel=2,
+                         subarrays_per_bank=1)
+SPILL_RESERVE = 10
+SPILL_LAYERS = 6
+
+
+def _block(pool=None, seed=5, q_b=4, p_b=2):
+    rng = np.random.default_rng(seed)
+    eng = (MVDRAMEngine(geom=BANKED) if pool is None
+           else MVDRAMEngine(geom=BANKED, pool=pool))
+    shapes = [(N, M), (N, M), (N, M), (M, N)]
+    hs = []
+    for i, (n, m) in enumerate(shapes):
+        w = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+        hs.append(eng.register(f"layer{i}", w, QuantSpec(bits=q_b),
+                               a_spec=QuantSpec(bits=p_b)))
+    prog = eng.compile(hs, groups=[[0, 1, 2], [3]])
+    X = [jnp.asarray(rng.normal(size=(B, n)), jnp.float32)
+         for (n, _m) in shapes]
+    return eng, hs, prog, X
+
+
+def sim_fabric(emit):
+    """Multi-DIMM scale-out + spill-tier capacity (DRAM fabric, ISSUE 9)."""
+    # -- scale-out: 1 vs 2 vs 4 DIMMs ------------------------------------
+    eng1, hs1, prog1, X = _block()
+    outs1, rep1 = prog1.run(X)
+    cost1 = prog1.price(batch=B)
+    staged1 = sum(h.placement.staged.host_bits_written for h in hs1)
+
+    speedups = {}
+    for dimms in (2, 4):
+        pool = FabricPool(geom=BANKED, dimms=dimms)
+        eng_f, hs_f, prog_f, _ = _block(pool=pool)
+        outs_f, rep_f = prog_f.run(X)
+        # placement never affects results: outputs AND per-(request, tile)
+        # OpCounts bit-identical to the single-pool program
+        for o1, o2 in zip(outs1, outs_f):
+            np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+        for r1, r2 in zip(rep1.reports, rep_f.reports):
+            for b in range(B):
+                assert [c.asdict() for c in r1.requests[b].tile_runtime] \
+                    == [c.asdict() for c in r2.requests[b].tile_runtime]
+        assert rep_f.staged.host_bits_written == staged1
+        # every module actually carries part of the block
+        assert {pool.dimm_of(h.name) for h in hs_f} == set(range(dimms))
+        cost_f = prog_f.price(batch=B)
+        assert cost_f.spill_restage_bits == 0
+        speedups[dimms] = cost1.t_total / cost_f.t_total
+        assert cost_f.staged_bits == cost1.staged_bits
+
+    emit("sim.fabric_scaleout_speedup_x", speedups[2],
+         "single-pool priced decode t_total / 2-DIMM fabric t_total")
+    # deterministic priced ratio → hard floor even under --smoke
+    assert speedups[2] >= 1.6, \
+        f"2-DIMM scale-out {speedups[2]:.2f}x below the 1.6x floor"
+    emit("sim.fabric_scaleout_4dimm_speedup_x", speedups[4],
+         "single-pool priced decode t_total / 4-DIMM fabric t_total")
+    assert speedups[4] >= speedups[2], \
+        "4 DIMMs must not price slower than 2"
+
+    # -- spill tier: a model larger than any single pool ------------------
+    rng = np.random.default_rng(7)
+    ws = [jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+          for _ in range(SPILL_LAYERS)]
+    pool = FabricPool(geom=SPILL_GEOM, dimms=1,
+                      compute_reserve=SPILL_RESERVE)
+    eng_s = MVDRAMEngine(geom=SPILL_GEOM, pool=pool, on_full="spill")
+    hs_s = [eng_s.register(f"l{i}", w, QuantSpec(bits=4),
+                           a_spec=QuantSpec(bits=4))
+            for i, w in enumerate(ws)]
+    assert len(pool.spilled()) == SPILL_LAYERS - 2   # the module holds two
+    prog_s = eng_s.compile([h.name for h in hs_s])
+
+    big = MVDRAMEngine(geom=dataclasses.replace(SPILL_GEOM,
+                                                subarrays_per_bank=4))
+    hb = [big.register(f"l{i}", w, QuantSpec(bits=4),
+                       a_spec=QuantSpec(bits=4)) for i, w in enumerate(ws)]
+    prog_b = big.compile([h.name for h in hb])
+
+    Xs = [jnp.asarray(rng.normal(size=(16,)), jnp.float32) for _ in ws]
+    ledger_before = pool.spill_restaged_bits
+    outs_s, rep_s = prog_s.run(Xs)
+    outs_b, _ = prog_b.run(Xs)
+    for o1, o2 in zip(outs_b, outs_s):
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    assert rep_s.spill_restages >= SPILL_LAYERS - 2  # the cold set paged
+    # the run's bill IS the pool ledger delta
+    assert pool.spill_restaged_bits - ledger_before \
+        == rep_s.spill_restage_bits
+
+    cost_s = prog_s.price(batch=1, executed=rep_s)
+    # EXACT reconciliation: the priced restage term is the CXL model's
+    # price of precisely the bits/restages the step paid
+    assert cost_s.t_spill_restage == eng_s.cxl.restage_time(
+        rep_s.spill_restage_bits, rep_s.spill_restages)
+    assert cost_s.spill_restage_bits == rep_s.spill_restage_bits
+    overhead = cost_s.t_total / (cost_s.t_total - cost_s.t_spill_restage)
+    assert overhead > 1.0
+    emit("sim.fabric_spill_restage_overhead_x", overhead,
+         "priced decode t_total / resident-only t_total (CXL page-ins "
+         "reconciled exactly)")
+
+
+if __name__ == "__main__":
+    def _emit(name, value, derived=""):
+        v = f"{value:.6g}" if isinstance(value, float) else value
+        print(f"{name},{v},{derived}")
+    sim_fabric(_emit)

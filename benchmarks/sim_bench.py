@@ -558,12 +558,13 @@ def kernel_program(emit):
                   f"program fusion speedup {speedup:.2f}x below 1.3x floor")
 
 
+from benchmarks.fabric_bench import sim_fabric  # noqa: E402
 from benchmarks.serve_traffic import sim_serve_traffic  # noqa: E402
 
 ALL = [sim_vectorized_vs_naive, sim_wave_vs_sequential,
        sim_batched_wave_sharing, sim_resident_decode, sim_fused_program,
-       sim_fault_injection, sim_serve_traffic, kernel_dots_issued,
-       kernel_program]
+       sim_fault_injection, sim_serve_traffic, sim_fabric,
+       kernel_dots_issued, kernel_program]
 
 # skipped under --smoke: Pallas interpret-mode timing is the long pole and
 # emits no gated ratio rows. The serve-traffic horizon stays in smoke:

@@ -44,6 +44,7 @@ import numpy as np
 from . import backends as _backends
 from .backends import Backend
 from .bitplane import BitplaneWeights, from_quantized, to_quantized
+from .pud.fabric import ColumnShardPlan, FabricPool, plan_column_shards
 from .pud.faults import FaultModel, FaultPolicy, FaultTrace
 from .pud.gemv import (CommandTemplates, GemvCost, PudGeometry, StagedWaves,
                        _lane_mask_arg, build_templates,
@@ -53,10 +54,11 @@ from .pud.gemv import (CommandTemplates, GemvCost, PudGeometry, StagedWaves,
 from .pud.residency import CapacityError, DramPool, Placement
 from .pud.schedule import (ProgramSchedule, schedule_batch, schedule_program,
                            schedule_tiles)
-from .pud.timing import (DDR4_2400, CpuBaseline, DDR4Model, GpuBaseline,
-                         ProgramCost, price_gemv, price_program)
+from .pud.timing import (CXL_TIER, DDR4_2400, CpuBaseline, CxlModel,
+                         DDR4Model, FabricCost, GpuBaseline, ProgramCost,
+                         combine_fabric_costs, price_gemv, price_program)
 from .quant import (QuantSpec, QuantizedTensor, quantize_activations,
-                    quantize_weights)
+                    quantize_weights, slice_quantized_cols)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -118,6 +120,34 @@ class GemvHandle:
     a_spec: Optional[QuantSpec]  # None => float activations (w-bit / a-fp)
     templates: Optional[CommandTemplates] = None
     placement: Optional[Placement] = None
+
+
+@dataclasses.dataclass
+class ShardedHandle:
+    """One GeMV registered column-chunk tensor-parallel across the fabric.
+
+    `parts[d]` is a regular `GemvHandle` over the quantized sub-matrix of
+    output columns `col_bounds[d] : col_bounds[d+1]` (sliced from ONE
+    quantization of the full matrix — `quant.slice_quantized_cols`
+    commutes with quantization, so each shard's codes equal the oracle's
+    matching columns code-for-code), placed on DIMM `d % dimms`. Each
+    module executes its shard's waves independently; the host reduces the
+    disjoint partial outputs by GeMV linearity
+    (`MVDRAMEngine.gemv_sharded`), bit-identical to the unsharded
+    single-pool launch. `plan` records how the split was expressed through
+    the repo's sharding rules (`fabric.plan_column_shards`).
+    """
+
+    name: str
+    parts: tuple           # (shards,) GemvHandle, one per column shard
+    col_bounds: tuple      # (shards+1,) output-column offsets into M
+    plan: ColumnShardPlan
+    n: int
+    m: int
+
+    @property
+    def shards(self) -> int:
+        return len(self.parts)
 
 
 class ProgramReport:
@@ -501,6 +531,194 @@ def _resident_report_builder(staged_layers: tuple, res, geom: PudGeometry):
     return build
 
 
+@dataclasses.dataclass
+class _FabricPart:
+    """One DIMM's slice of a fabric program: the block layers co-resident
+    on that module (or a single spilled layer awaiting page-in), the
+    part-local concurrency groups, and the compiled per-module program —
+    rebuilt lazily whenever migration/compaction/restage moves a member."""
+
+    indices: tuple                       # original layer indices, ascending
+    handles: tuple                       # the engine's GemvHandles
+    groups: tuple                        # part-LOCAL concurrency groups
+    prog: Optional[GemvProgram] = None
+    placements: tuple = ()               # placements `prog` was built from
+
+
+class FabricReport:
+    """Accounting for a fabric decode step: one `ProgramReport` per
+    per-module part, plus the spill-tier restage bill the step actually
+    paid paging cold parts in. `reports` reassembles the per-layer
+    `BatchReport`s in the block's ORIGINAL layer order, so everything
+    downstream of a single-pool `ProgramReport` (staging reconciliation,
+    per-tile OpCounts comparisons) reads a fabric report identically."""
+
+    def __init__(self, parts: tuple, part_indices: tuple,
+                 part_spill_bits: tuple, part_spill_restages: tuple):
+        self.parts = tuple(parts)
+        self.part_indices = tuple(tuple(ix) for ix in part_indices)
+        # restage bits/count paid by THIS step, per part (0 for residents)
+        self.part_spill_bits = tuple(part_spill_bits)
+        self.part_spill_restages = tuple(part_spill_restages)
+        self.fused = all(p.fused for p in self.parts)
+        self.waves = sum(p.waves for p in self.parts)
+        self.batch = self.parts[0].batch if self.parts else 1
+        self.lanes = self.parts[0].lanes if self.parts else 1
+        fault = None
+        if any(p.fault is not None for p in self.parts):
+            fault = FaultTrace()
+            for p in self.parts:
+                if p.fault is not None:
+                    fault.merge(p.fault)
+        self.fault = fault
+        self.retry_wave_ops = tuple(op for p in self.parts
+                                    for op in p.retry_wave_ops)
+
+    @property
+    def spill_restage_bits(self) -> int:
+        return sum(self.part_spill_bits)
+
+    @property
+    def spill_restages(self) -> int:
+        return sum(self.part_spill_restages)
+
+    @property
+    def reports(self) -> tuple:
+        n = sum(len(ix) for ix in self.part_indices)
+        out = [None] * n
+        for rep, ix in zip(self.parts, self.part_indices):
+            for j, li in enumerate(ix):
+                out[li] = rep.reports[j]
+        return tuple(out)
+
+    @property
+    def layers(self) -> int:
+        return sum(len(ix) for ix in self.part_indices)
+
+    @property
+    def staged(self):
+        from .pud.device import OpCounts
+        total = OpCounts()
+        for r in self.reports:
+            if r.staged is not None:
+                total = total.merge(r.staged)
+        return total
+
+    @property
+    def repeated_staging(self):
+        from .pud.device import OpCounts
+        total = OpCounts()
+        for r in self.reports:
+            total = total.merge(r.shared_preload)
+        return total
+
+
+class FabricProgram:
+    """A decode block compiled across the DRAM fabric.
+
+    `MVDRAMEngine.compile` on a `FabricPool` engine partitions the block
+    by residency: each DIMM's co-resident layers become one per-module
+    `GemvProgram` part (waves fused within the module exactly as on a
+    single pool), and spilled layers become single-layer parts that `run`
+    pages in from the capacity tier on first touch. Parts execute their
+    OWN module's channels, so the combined price overlaps their compute
+    (`MVDRAMEngine.price_fabric`); outputs and per-tile runtime OpCounts
+    stay bit-identical to the single-pool program because staging/
+    execution never depended on placement — only the wave packing and
+    fault keys did (tested).
+
+    The program survives fabric churn: cross-DIMM migration, member-pool
+    compaction and spill/restage each swap a member's placement, and
+    `run` re-localizes + recompiles exactly the affected part."""
+
+    def __init__(self, engine: "MVDRAMEngine", handles: tuple,
+                 groups: tuple, b_max: Optional[int], parts: tuple):
+        self.engine = engine
+        self.handles = handles
+        self.groups = groups
+        self.b_max = b_max
+        self.parts = parts
+        self.steps = 0
+
+    @property
+    def layers(self) -> int:
+        return len(self.handles)
+
+    def __repr__(self):
+        spilled = sum(1 for p in self.parts if p.prog is None)
+        return (f"<FabricProgram {self.layers} layers, "
+                f"{len(self.parts)} parts ({spilled} awaiting page-in), "
+                f"{self.engine.pool.dimms} dimms>")
+
+    def _ensure_part(self, part: _FabricPart) -> tuple:
+        """Make every member resident and the part's program current.
+        Returns (restage_bits, restages) paid HERE paging members in from
+        the spill tier — the exact bill `price_fabric` reconciles."""
+        pool = self.engine.pool
+        paid_bits, paid_restages = 0, 0
+        for h in part.handles:
+            if pool.is_resident(h.name):
+                cur = pool.placements.get(h.name)
+                if h.placement is not cur:
+                    h.placement = cur    # migration/compaction moved it
+            elif pool.is_spilled(h.name):
+                h.placement = pool.restage(h.name)
+                paid_bits += h.placement.staged.host_bits_written
+                paid_restages += 1
+            else:
+                raise ValueError(
+                    f"layer {h.name!r} is no longer resident on the "
+                    f"fabric (evicted?); re-register it before running "
+                    f"the program")
+        placements = tuple(h.placement for h in part.handles)
+        if part.prog is None or placements != part.placements:
+            part.prog = self.engine._compile_part(part.handles, part.groups,
+                                                  self.b_max)
+            part.placements = placements
+        return paid_bits, paid_restages
+
+    def run(self, activations: Sequence[jax.Array],
+            layer_major: bool = False,
+            lane_mask: Optional[np.ndarray] = None):
+        """Execute one decode step across the fabric. Same contract as
+        `GemvProgram.run` — activations in the block's original layer
+        order, outputs returned in that order, bit-identical to the
+        single-pool program — plus demand paging: parts whose members sit
+        in the spill tier restage first, and the returned `FabricReport`
+        carries the restage bits/count this step paid."""
+        if len(activations) != self.layers:
+            raise ValueError(
+                f"{len(activations)} activations for a {self.layers}-layer "
+                f"program")
+        outs = [None] * self.layers
+        part_reports, part_bits, part_restages = [], [], []
+        for part in self.parts:
+            bits, restages = self._ensure_part(part)
+            xs = [activations[i] for i in part.indices]
+            os, rep = part.prog.run(xs, layer_major=layer_major,
+                                    lane_mask=lane_mask)
+            for i, o in zip(part.indices, os):
+                outs[i] = o
+            part_reports.append(rep)
+            part_bits.append(bits)
+            part_restages.append(restages)
+        self.steps += 1
+        report = FabricReport(
+            parts=tuple(part_reports),
+            part_indices=tuple(p.indices for p in self.parts),
+            part_spill_bits=tuple(part_bits),
+            part_spill_restages=tuple(part_restages))
+        return outs, report
+
+    def price(self, bit_density: float = 0.5, batch: int = 1,
+              usable_cols: Optional[int] = None,
+              executed: Optional[FabricReport] = None) -> "FabricCost":
+        return self.engine.price_fabric(self, bit_density=bit_density,
+                                        batch=batch,
+                                        usable_cols=usable_cols,
+                                        executed=executed)
+
+
 class MVDRAMEngine:
     """Processor-DRAM co-designed GeMV engine (TPU-adapted MVDRAM)."""
 
@@ -512,7 +730,8 @@ class MVDRAMEngine:
                  pool: Optional[DramPool] = None,
                  on_full: str = "evict",
                  fault_model: Optional[FaultModel] = None,
-                 fault_policy: Optional[FaultPolicy] = None):
+                 fault_policy: Optional[FaultPolicy] = None,
+                 cxl: Optional[CxlModel] = None):
         self.geom = geom
         self.timing = timing
         self.cpu = cpu
@@ -520,6 +739,8 @@ class MVDRAMEngine:
         self.sparsity = sparsity
         self.pool = pool if pool is not None else DramPool(geom)
         self.on_full = on_full
+        # CXL capacity-tier constants pricing FabricPool spill restages
+        self.cxl = cxl if cxl is not None else CXL_TIER
         # fault injection + recovery ladder: FaultModel.none() yields NO
         # session, so the default engine takes the exact pre-fault paths
         self.fault_model = (fault_model if fault_model is not None
@@ -537,6 +758,7 @@ class MVDRAMEngine:
         self.fault_quarantines = 0
         self.fault_restages = 0
         self.handles: dict[str, GemvHandle] = {}
+        self.sharded: dict[str, ShardedHandle] = {}
         self._staged: dict[str, StagedWaves] = {}
         self._leaf_names: dict[tuple, str] = {}  # serving leaf id → handle
         self.routed_linears = 0   # serving linears traced through linear()
@@ -587,6 +809,44 @@ class MVDRAMEngine:
                 "(q, N//32, M)); stacked expert leaves are served per-expert")
         return self._install(name, bw, to_quantized(bw), a_spec)
 
+    def register_sharded(self, name: str, w: jax.Array, w_spec: QuantSpec,
+                         a_spec: Optional[QuantSpec] = None,
+                         shards: Optional[int] = None) -> ShardedHandle:
+        """Register ONE (N, M) GeMV column-chunk tensor-parallel across the
+        fabric: quantize once, slice the quantized tensor into contiguous
+        column-chunk shards (`fabric.plan_column_shards` expresses the
+        split through `parallel/sharding.py` rules over a `launch/mesh.py`
+        host mesh), and place shard d on DIMM `d % dimms` as the regular
+        handle `{name}@shard{d}`. `shards` defaults to the pool's DIMM
+        count (1 on a plain `DramPool` — the single-pool oracle
+        configuration). Execute with `gemv_sharded`."""
+        if shards is None:
+            shards = (self.pool.dimms
+                      if isinstance(self.pool, FabricPool) else 1)
+        if shards < 1:
+            raise ValueError(f"need >= 1 shard, got {shards}")
+        wq = quantize_weights(w, w_spec)
+        n, m = int(wq.values.shape[0]), int(wq.values.shape[1])
+        q = wq.spec.bits
+        _chunk_rows, col_chunks = self._sim_grid(n, m, q)
+        plan = plan_column_shards(col_chunks, shards)
+        m_per_tile = max(self.geom.subarray_cols // q, 1)
+        bounds = plan.bounds_cols(m, m_per_tile)
+        dimms = (self.pool.dimms
+                 if isinstance(self.pool, FabricPool) else 1)
+        parts = []
+        for d in range(plan.shards):
+            lo, hi = bounds[d], bounds[d + 1]
+            wq_d = slice_quantized_cols(wq, lo, hi)
+            parts.append(self._install(
+                f"{name}@shard{d}", from_quantized(wq_d), wq_d, a_spec,
+                dimm=(d % dimms) if isinstance(self.pool, FabricPool)
+                else None))
+        sh = ShardedHandle(name=name, parts=tuple(parts),
+                           col_bounds=bounds, plan=plan, n=n, m=m)
+        self.sharded[name] = sh
+        return sh
+
     def _sim_grid(self, n: int, m: int, q: int):
         """The matrix's tile grid at the SIMULATED geometry (what executes
         and what the pool places): per-chunk reduction rows + col chunks."""
@@ -598,19 +858,29 @@ class MVDRAMEngine:
         return chunk_rows, math.ceil(m / max(m_per_tile, 1))
 
     def _install(self, name: str, bw: BitplaneWeights, wq: QuantizedTensor,
-                 a_spec: Optional[QuantSpec]) -> GemvHandle:
+                 a_spec: Optional[QuantSpec],
+                 dimm: Optional[int] = None) -> GemvHandle:
         """Shared tail of both registration entries: one plan/template/
         placement/handle construction so the sim and kernel paths can't
-        diverge."""
+        diverge. `dimm` pins the placement to one fabric module (the
+        column-shard path puts shard d on DIMM d); it requires a
+        `FabricPool`."""
         p = a_spec.bits if a_spec is not None else 16
         plan = make_plan(m=bw.m, n=bw.n, q=bw.bits, p=p, geom=self.geom)
         templates = (build_templates(plan.n_sub, p)
                      if a_spec is not None else None)
         chunk_rows, col_chunks = self._sim_grid(bw.n, bw.m, bw.bits)
+        place_kwargs = {}
+        if dimm is not None:
+            if not isinstance(self.pool, FabricPool):
+                raise ValueError(
+                    f"dimm={dimm} pinning needs a FabricPool; this engine's "
+                    f"pool is a {type(self.pool).__name__}")
+            place_kwargs["dimm"] = dimm
         placement = self.pool.place(
             name, chunk_rows, col_chunks,
             replace=(name in self.handles or self.pool.is_resident(name)),
-            on_full=self.on_full)
+            on_full=self.on_full, **place_kwargs)
         self._staged.pop(name, None)
         h = GemvHandle(name=name, weights=bw, wq=wq, plan=plan, a_spec=a_spec,
                        templates=templates, placement=placement)
@@ -719,6 +989,46 @@ class MVDRAMEngine:
                 if lane_mask is not None:
                     out = np.where(np.asarray(lane_mask)[:, None], out, 0)
         return out, report
+
+    def gemv_sharded(self, sharded: Union[ShardedHandle, str], a: jax.Array,
+                     lane_mask: Optional[np.ndarray] = None):
+        """Execute a column-sharded GeMV: each shard runs its resident
+        simulator launch on its own DIMM's banks, and the host reduces the
+        per-shard partials into the full (B, M) output by GeMV linearity —
+        the shards cover DISJOINT output columns, so the reduction is an
+        exact scatter and the result is bit-identical to the unsharded
+        single-pool launch (tested across ragged chunks, mixed q/p and
+        lane masks). Returns (out, (per-shard BatchReport, ...))."""
+        import jax.numpy as jnp
+        sh = self.sharded[sharded] if isinstance(sharded, str) else sharded
+        if self.sharded.get(sh.name) is not sh:
+            raise ValueError(
+                f"stale sharded handle {sh.name!r}: the name was "
+                f"re-registered; re-resolve it before launching")
+        x = jnp.asarray(a)
+        squeeze = x.ndim == 1
+        if squeeze:
+            x = x[None, :]
+        if x.shape[-1] != sh.n:
+            raise ValueError(
+                f"sharded GeMV {sh.name!r} expects (..., {sh.n}) "
+                f"activations, got shape {tuple(x.shape)}")
+        out = np.zeros((int(x.shape[0]), sh.m), dtype=np.float32)
+        reports = []
+        for d, part in enumerate(sh.parts):
+            staged = self.staged_for(part)
+            if staged is None:
+                raise ValueError(
+                    f"shard {part.name!r} of {sh.name!r} is no longer "
+                    f"resident (evicted?); re-register the sharded GeMV")
+            o, rep = self.run_resident(part, x, staged, lane_mask=lane_mask)
+            lo, hi = sh.col_bounds[d], sh.col_bounds[d + 1]
+            # disjoint column ranges: the host-side linear reduction is an
+            # exact scatter of each module's partial into its slice
+            out[:, lo:hi] += np.asarray(o, dtype=np.float32)
+            reports.append(rep)
+        out_j = jnp.asarray(out[0] if squeeze else out)
+        return out_j, tuple(reports)
 
     # -- fault recovery (ABFT escalation ladder) ------------------------------
 
@@ -863,6 +1173,10 @@ class MVDRAMEngine:
                 f"handle(s) {dup} appear more than once in the program; "
                 f"register tied weights under distinct names to reuse a "
                 f"matrix within one decode step")
+        groups_t = (tuple(tuple(g) for g in groups)
+                    if groups is not None else None)
+        if isinstance(self.pool, FabricPool):
+            return self._compile_fabric(hs, groups_t, b_max)
         for h in hs:
             if not self.pool.is_resident(h.name):
                 raise ValueError(
@@ -870,19 +1184,89 @@ class MVDRAMEngine:
                     f"after eviction) before compiling")
         grids = [(h.placement.n_chunks, h.placement.col_chunks) for h in hs]
         placements = [h.placement.banks for h in hs]
-        groups_t = (tuple(tuple(g) for g in groups)
-                    if groups is not None else None)
         sched = schedule_program(grids, self.geom, groups=groups_t,
                                  placements=placements)
         return GemvProgram(self, hs, sched,
                            groups_t or tuple((i,) for i in range(len(hs))),
                            b_max=b_max)
 
+    def _local_banks(self, h: GemvHandle) -> tuple:
+        """The handle's per-tile (channel, bank) homes in its OWN module's
+        coordinates — what per-part wave schedules and `price_program`'s
+        per-channel command-bus accounting index with. (Fault keys stay
+        GLOBAL via `h.placement.banks`, so weak-cell maps remain distinct
+        per module.)"""
+        if isinstance(self.pool, FabricPool):
+            _dimm, local = self.pool.locate(h.name)
+            return local.banks
+        return h.placement.banks
+
+    def _compile_part(self, hs: tuple, groups: tuple,
+                      b_max: Optional[int]) -> GemvProgram:
+        """One fabric part — the layers co-resident on a single DIMM —
+        compiled exactly like a single-pool program over that module's
+        local bank coordinates."""
+        grids = [(h.placement.n_chunks, h.placement.col_chunks) for h in hs]
+        placements = [self._local_banks(h) for h in hs]
+        sched = schedule_program(grids, self.geom, groups=groups,
+                                 placements=placements)
+        return GemvProgram(self, hs, sched, groups, b_max=b_max)
+
+    def _compile_fabric(self, hs: tuple, groups_t: Optional[tuple],
+                        b_max: Optional[int]) -> "FabricProgram":
+        """Partition a decode block across the fabric: each DIMM's
+        co-resident layers compile into one per-module part (waves fused
+        within the module, concurrency groups subset to the part's
+        members), and each SPILLED layer becomes its own single-layer part
+        that `FabricProgram.run` pages in on demand — the capacity-tier
+        path that lets a program serve a model larger than any one pool."""
+        groups_t = groups_t or tuple((i,) for i in range(len(hs)))
+        pool = self.pool
+        home: dict[int, Optional[int]] = {}
+        for i, h in enumerate(hs):
+            if pool.is_resident(h.name):
+                home[i] = pool.dimm_of(h.name)
+            elif pool.is_spilled(h.name):
+                home[i] = None
+            else:
+                raise ValueError(
+                    f"{h.name!r} is neither resident nor spilled on the "
+                    f"fabric; register it (or re-place after eviction) "
+                    f"before compiling")
+        buckets: dict = {}
+        for i in range(len(hs)):
+            key = home[i] if home[i] is not None else ("spill", i)
+            buckets.setdefault(key, []).append(i)
+        resident_keys = sorted(k for k in buckets if isinstance(k, int))
+        spill_keys = sorted((k for k in buckets if not isinstance(k, int)),
+                            key=lambda k: k[1])
+        parts = []
+        for key in resident_keys + spill_keys:
+            indices = tuple(buckets[key])
+            pos = {li: j for j, li in enumerate(indices)}
+            sub_groups = tuple(
+                tuple(pos[li] for li in g if li in pos)
+                for g in groups_t if any(li in pos for li in g))
+            parts.append(_FabricPart(
+                indices=indices,
+                handles=tuple(hs[li] for li in indices),
+                groups=sub_groups))
+        program = FabricProgram(self, hs, groups_t, b_max, tuple(parts))
+        for part in parts:
+            # resident parts compile eagerly so `price` works before the
+            # first run; spilled parts wait for their page-in
+            if all(pool.is_resident(h.name) for h in part.handles):
+                part.prog = self._compile_part(part.handles, part.groups,
+                                               b_max)
+                part.placements = tuple(h.placement for h in part.handles)
+        return program
+
     def price_program(self, program: GemvProgram, bit_density: float = 0.5,
                       batch: int = 1,
                       usable_cols: Optional[int] = None,
-                      executed: Optional[ProgramReport] = None
-                      ) -> ProgramCost:
+                      executed: Optional[ProgramReport] = None,
+                      spill_restage_bits: int = 0,
+                      spill_restages: int = 0) -> ProgramCost:
         """DDR4 price of one fused decode step. Defaults to the SIMULATED
         column width so `staged_bits` reconciles exactly with the pool's
         placement accounting and the resident `BatchReport`s (tested);
@@ -940,7 +1324,69 @@ class MVDRAMEngine:
         return price_program(costs, sched, batch=batch,
                              geom=self.geom, model=self.timing,
                              executed_wave_ops=executed_wave_ops,
-                             retry_wave_ops=retry_wave_ops)
+                             retry_wave_ops=retry_wave_ops,
+                             spill_restage_bits=spill_restage_bits,
+                             spill_restages=spill_restages,
+                             spill=self.cxl)
+
+    def _provisional_part_prog(self, part: "_FabricPart") -> GemvProgram:
+        """A throwaway schedule for a spilled part that has never been
+        paged in — the analytic price needs a wave count but there is no
+        placement to localize, so the default round-robin rotation stands
+        in (exactly what `place` will produce for a fresh single-layer
+        part)."""
+        grids = []
+        for h in part.handles:
+            bw = h.weights
+            chunk_rows, col_chunks = self._sim_grid(bw.n, bw.m, bw.bits)
+            grids.append((len(chunk_rows), col_chunks))
+        sched = schedule_program(grids, self.geom, groups=part.groups)
+        return GemvProgram(self, part.handles, sched, part.groups,
+                           b_max=part.prog.b_max if part.prog else None)
+
+    def price_fabric(self, program: "FabricProgram",
+                     bit_density: float = 0.5, batch: int = 1,
+                     usable_cols: Optional[int] = None,
+                     executed: Optional["FabricReport"] = None
+                     ) -> FabricCost:
+        """DDR4 price of one fabric decode step: each part priced like a
+        single-pool program over its OWN module's command bus, then
+        combined — per-module parts overlap (channels are independent
+        across DIMMs, paper §VII scaled to modules), host-side terms sum.
+        Never-paged spill parts price their restage analytically from the
+        spill ledger; `executed=` (a `FabricReport`) reconciles both the
+        wave serialization AND the restage bits the run actually paid."""
+        if not isinstance(self.pool, FabricPool):
+            raise ValueError(
+                f"price_fabric needs a FabricPool engine, pool is "
+                f"{type(self.pool).__name__}")
+        if executed is not None and len(executed.parts) != len(program.parts):
+            raise ValueError(
+                f"executed report has {len(executed.parts)} parts, "
+                f"program has {len(program.parts)}")
+        costs, part_dimms = [], []
+        for k, part in enumerate(program.parts):
+            rep = executed.parts[k] if executed is not None else None
+            if executed is not None:
+                sb = executed.part_spill_bits[k]
+                sr = executed.part_spill_restages[k]
+            else:
+                sb = sum(self.pool.spill_entry(h.name).bits
+                         for h in part.handles
+                         if self.pool.is_spilled(h.name))
+                sr = sum(1 for h in part.handles
+                         if self.pool.is_spilled(h.name))
+            prog_k = part.prog or self._provisional_part_prog(part)
+            costs.append(self.price_program(
+                prog_k, bit_density=bit_density, batch=batch,
+                usable_cols=usable_cols, executed=rep,
+                spill_restage_bits=sb, spill_restages=sr))
+            dimms_here = {self.pool.dimm_of(h.name) for h in part.handles
+                          if self.pool.is_resident(h.name)}
+            part_dimms.append(dimms_here.pop()
+                              if len(dimms_here) == 1 else None)
+        return combine_fabric_costs(costs, tuple(part_dimms),
+                                    dimms=self.pool.dimms, batch=batch)
 
     # -- pricing (paper-faithful DDR4 numbers) --------------------------------
 

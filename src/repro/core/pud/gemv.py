@@ -311,7 +311,10 @@ def execute_plan_templated(sub: Subarray, lay: HorizontalLayout,
     Bit-identical accumulator state and identical OpCounts vs
     `execute_plan` on the same activation vector (tested equivalence).
     """
-    assert tplan.templates.r == lay.r, "template/layout accumulator mismatch"
+    if tplan.templates.r != lay.r:
+        raise ValueError(
+            f"template/layout accumulator mismatch: template plan built "
+            f"for r={tplan.templates.r}, layout has r={lay.r}")
     clear_accumulator(sub, lay)
     for k, tmpl in enumerate(tplan.templates.offsets):
         add_rows_batched(sub, lay, tplan.rows_per_offset[k], offset=k,

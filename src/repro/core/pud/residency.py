@@ -261,9 +261,12 @@ class DramPool:
                 f"col_chunks={col_chunks}")
         if name in self.placements:
             if not replace:
+                prev = self.placements[name]
                 raise ResidencyError(
-                    f"{name!r} is already resident; evict() it or pass "
-                    f"replace=True to re-register")
+                    f"{name!r} is already resident ({prev.resident_rows} "
+                    f"rows across {len(prev.spans)} bank span(s), pool "
+                    f"{self.used_rows}/{self.total_rows} rows used); "
+                    f"evict() it or pass replace=True to re-register")
             self.evict(name)
             self.replacements += 1
         tiles = len(chunk_rows) * col_chunks
@@ -317,7 +320,11 @@ class DramPool:
         AROUND them, since a caller that fixed absolute row addresses may
         coordinate them with state the pool cannot see."""
         if name in self.placements:
-            raise ResidencyError(f"{name!r} is already resident")
+            prev = self.placements[name]
+            raise ResidencyError(
+                f"{name!r} is already resident ({prev.resident_rows} rows "
+                f"across {len(prev.spans)} bank span(s)); evict() it before "
+                f"pinning new rows")
         spans = tuple(spans)
         for s in spans:
             if s.row1 > self.bank_capacity or s.row0 < 0:
@@ -354,7 +361,10 @@ class DramPool:
         Notifies `evict_listeners` — pool-driven evictions (LRU, replace)
         go through here too, so owners always see the retirement."""
         if name not in self.placements:
-            raise ResidencyError(f"{name!r} is not resident")
+            raise ResidencyError(
+                f"{name!r} is not resident ({len(self.placements)} resident "
+                f"placement(s), {self.free_rows}/{self.total_rows} rows "
+                f"free)")
         placement = self.placements.pop(name)
         self._lru.pop(name, None)
         for cb in self._occ:
@@ -458,6 +468,22 @@ class DramPool:
         self.compactions += 1
         self.moved_placements += len(moved_names)
         return {"moved": len(moved_names), "freed_gaps": gap_rows}
+
+    def can_place(self, chunk_rows: Sequence[int], col_chunks: int) -> bool:
+        """Feasibility probe: would `place()` succeed right now without any
+        eviction? Pure read — cursor, occupancy and LRU state untouched, so
+        the fabric's rebalancer can test a destination DIMM before paying a
+        migration's evict/restage churn."""
+        chunk_rows = list(chunk_rows)
+        if not chunk_rows or col_chunks < 1:
+            return False
+        try:
+            banks = self._tile_banks(len(chunk_rows) * col_chunks)
+        except CapacityError:
+            return False
+        need = self._demand(banks, chunk_rows, col_chunks)
+        return all(self._find_gap(cb, rows) is not None
+                   for cb, rows in need.items())
 
     def touch(self, name: str) -> None:
         """LRU bump on execution (the engine calls this per GeMV launch)."""

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+from typing import Optional
 
 from .device import OpCounts
 from .gemv import GemvCost, PudGeometry
@@ -100,6 +101,37 @@ class GpuBaseline:
 
 
 DDR4_2400 = DDR4Model()
+
+
+@dataclasses.dataclass(frozen=True)
+class CxlModel:
+    """CXL-attached capacity tier behind the DRAM fabric's spill path.
+
+    Cold layers parked in the tier pay nothing while parked; paging one
+    back into DIMM residency rewrites its staged bit-planes through the
+    CXL link (Sangam's chiplet scale-out attaches exactly this kind of
+    far-memory pool, PAPERS.md). Bandwidth is the sustained far-memory
+    read a x8 CXL 2.0 device delivers into a host-driven row rewrite;
+    latency is the per-page-in protocol round trip.
+    """
+
+    restage_bw: float = 12e9     # B/s sustained tier -> DIMM rewrite
+    latency: float = 600e-9      # s protocol round trip per page-in
+
+    def restage_time(self, bits: int, restages: Optional[int] = None
+                     ) -> float:
+        """Seconds to page `bits` of staged rows back in over `restages`
+        separate page-ins (default: one if there is anything to move)."""
+        if bits < 0 or (restages is not None and restages < 0):
+            raise ValueError(
+                f"negative restage traffic: bits={bits}, "
+                f"restages={restages}")
+        if restages is None:
+            restages = 1 if bits else 0
+        return restages * self.latency + (bits / 8) / self.restage_bw
+
+
+CXL_TIER = CxlModel()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -348,11 +380,19 @@ class ProgramCost:
     # zero on fault-free runs, so the pre-fault pricing is unchanged.
     t_retry: float = 0.0
     retry_waves: int = 0
+    # Capacity-tier paging: staged bits the step rewrote paging spilled
+    # layers back from the CXL tier (`FabricPool.restage`), priced by
+    # `CxlModel.restage_time`; zero on all-hot steps, so resident pricing
+    # is unchanged — the same separate-term pattern as `t_retry`.
+    t_spill_restage: float = 0.0
+    spill_restage_bits: int = 0
+    spill_restages: int = 0
 
     @property
     def t_total(self) -> float:
         return (self.t_compute + self.t_aggregate + self.t_encode_extra
-                + self.t_weight_load + self.t_retry)
+                + self.t_weight_load + self.t_retry
+                + self.t_spill_restage)
 
     @property
     def e_total(self) -> float:
@@ -380,7 +420,10 @@ def price_program(costs, sched: ProgramSchedule, batch: int = 1,
                   geom: PudGeometry = PudGeometry(),
                   model: DDR4Model = DDR4_2400,
                   executed_wave_ops=None,
-                  retry_wave_ops=None) -> ProgramCost:
+                  retry_wave_ops=None,
+                  spill_restage_bits: int = 0,
+                  spill_restages: int = 0,
+                  spill: Optional[CxlModel] = None) -> ProgramCost:
     """Price one decode step of a compiled program of resident GeMVs.
 
     costs: (L,) per-layer analytic `GemvCost` (single-pass, e.g.
@@ -408,6 +451,13 @@ def price_program(costs, sched: ProgramSchedule, batch: int = 1,
     term so fault-storm overhead is visible next to, not folded into, the
     scheduled compute time. The base wave-count validation is unchanged:
     retries are extras on top of the schedule's waves, not members of it.
+
+    `spill_restage_bits` / `spill_restages` — staged bits (and page-in
+    count) this step rewrote bringing spilled layers back from the
+    capacity tier (`FabricPool.restage`); priced by `spill`
+    (a `CxlModel`, required when the traffic is non-zero) into the
+    separate `t_spill_restage` term, exactly the `t_retry` pattern —
+    all-hot steps price unchanged.
     """
     costs = list(costs)
     if len(costs) != sched.layers:
@@ -446,6 +496,15 @@ def price_program(costs, sched: ProgramSchedule, batch: int = 1,
               * model.e_host_op + model.idle_power * t_compute)
     retry_wave_ops = list(retry_wave_ops) if retry_wave_ops else []
     t_retry = float(sum(retry_wave_ops)) * model.t_op
+    if spill_restage_bits or spill_restages:
+        if spill is None:
+            raise ValueError(
+                f"spill_restage_bits={spill_restage_bits} "
+                f"(restages={spill_restages}) needs a CxlModel to price "
+                f"the tier traffic — pass spill=")
+        t_spill = spill.restage_time(spill_restage_bits, spill_restages)
+    else:
+        t_spill = 0.0
     return ProgramCost(
         layers=len(costs), batch=batch,
         t_compute=t_compute, t_aggregate=t_aggregate,
@@ -456,7 +515,147 @@ def price_program(costs, sched: ProgramSchedule, batch: int = 1,
         e_pud=e_pud, e_io=e_io, e_host=e_host,
         sequential=tuple(price_gemv_batched(c, batch, geom, model)
                          for c in costs),
-        t_retry=t_retry, retry_waves=len(retry_wave_ops))
+        t_retry=t_retry, retry_waves=len(retry_wave_ops),
+        t_spill_restage=t_spill, spill_restage_bits=spill_restage_bits,
+        spill_restages=spill_restages)
+
+
+# ---------------------------------------------------------------------------
+# Fabric sessions: pricing one decode step across multiple DIMM parts
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FabricCost:
+    """Priced execution of one decode step of a `FabricProgram`.
+
+    Each part is a per-DIMM `ProgramCost`; modules execute their parts'
+    waves INDEPENDENTLY (separate command buses, separate banks — the §VII
+    wave parallelism extended across modules), so fused compute overlaps:
+    `t_compute` is the max over DIMMs of each module's summed part
+    compute, plus any part whose home module is unknown (a spilled part
+    priced before paging) serialized on top. Host-side terms — accumulator
+    readout, non-overlapped encoding, fault retries, CXL restage traffic —
+    share one host and SUM across parts.
+    """
+
+    dimms: int
+    batch: int
+    parts: tuple          # per-part ProgramCost
+    part_dimms: tuple     # home DIMM per part (None → serialized)
+    t_compute: float      # overlapped across modules
+    t_aggregate: float
+    t_encode_extra: float
+    t_retry: float
+    t_spill_restage: float
+    spill_restage_bits: int
+    spill_restages: int
+    staged_bits: int
+    waves: int
+    waves_shared: int
+    e_pud: float
+    e_io: float
+    e_host: float
+
+    @property
+    def layers(self) -> int:
+        return sum(c.layers for c in self.parts)
+
+    @property
+    def t_total(self) -> float:
+        return (self.t_compute + self.t_aggregate + self.t_encode_extra
+                + self.t_retry + self.t_spill_restage)
+
+    @property
+    def e_total(self) -> float:
+        return self.e_pud + self.e_io + self.e_host
+
+    @property
+    def t_serial_compute(self) -> float:
+        """Fused compute with the cross-DIMM overlap removed (every part's
+        waves serialized on one module) — the single-pool contrast the
+        scale-out speedup is measured against."""
+        return sum(c.t_compute for c in self.parts)
+
+    @property
+    def t_serial_total(self) -> float:
+        return (self.t_serial_compute + self.t_aggregate
+                + self.t_encode_extra + self.t_retry
+                + self.t_spill_restage)
+
+    @property
+    def scaleout_speedup(self) -> float:
+        return self.t_serial_total / self.t_total
+
+    @property
+    def t_sequential_total(self) -> float:
+        """Per-layer isolated launches, re-staging every step (the same
+        baseline `ProgramCost.t_sequential_total` prices)."""
+        return sum(c.t_sequential_total for c in self.parts)
+
+    @property
+    def residency_speedup(self) -> float:
+        return self.t_sequential_total / self.t_total
+
+    def asdict(self):
+        d = dataclasses.asdict(self)
+        d["parts"] = [c.asdict() for c in self.parts]
+        d["part_dimms"] = list(self.part_dimms)
+        d["layers"] = self.layers
+        d["t_total"] = self.t_total
+        d["t_serial_total"] = self.t_serial_total
+        d["scaleout_speedup"] = self.scaleout_speedup
+        d["t_sequential_total"] = self.t_sequential_total
+        d["residency_speedup"] = self.residency_speedup
+        return d
+
+
+def combine_fabric_costs(parts, part_dimms, dimms: int,
+                         batch: int = 1) -> FabricCost:
+    """Fold per-part `ProgramCost`s into one `FabricCost`.
+
+    parts: per-part priced costs (from `price_program`, spill term
+    included where the part paged layers in); part_dimms: the home DIMM
+    of each part, or None for a part not currently resident anywhere
+    (priced conservatively as serialized compute).
+    """
+    parts = tuple(parts)
+    part_dimms = tuple(part_dimms)
+    if len(parts) != len(part_dimms):
+        raise ValueError(
+            f"{len(parts)} part costs vs {len(part_dimms)} part DIMMs")
+    if not parts:
+        raise ValueError("cannot combine zero fabric parts")
+    if any(c.batch != batch for c in parts):
+        raise ValueError(
+            f"part batches {[c.batch for c in parts]} != fabric "
+            f"batch {batch}")
+    for d in part_dimms:
+        if d is not None and not 0 <= d < dimms:
+            raise ValueError(
+                f"part DIMM {d} out of range for a {dimms}-DIMM fabric")
+    per_dimm: dict[int, float] = {}
+    serial = 0.0
+    for c, d in zip(parts, part_dimms):
+        if d is None:
+            serial += c.t_compute
+        else:
+            per_dimm[d] = per_dimm.get(d, 0.0) + c.t_compute
+    t_compute = (max(per_dimm.values()) if per_dimm else 0.0) + serial
+    return FabricCost(
+        dimms=dimms, batch=batch, parts=parts, part_dimms=part_dimms,
+        t_compute=t_compute,
+        t_aggregate=sum(c.t_aggregate for c in parts),
+        t_encode_extra=sum(c.t_encode_extra for c in parts),
+        t_retry=sum(c.t_retry for c in parts),
+        t_spill_restage=sum(c.t_spill_restage for c in parts),
+        spill_restage_bits=sum(c.spill_restage_bits for c in parts),
+        spill_restages=sum(c.spill_restages for c in parts),
+        staged_bits=sum(c.staged_bits for c in parts),
+        waves=sum(c.waves for c in parts),
+        waves_shared=sum(c.waves_shared for c in parts),
+        e_pud=sum(c.e_pud for c in parts),
+        e_io=sum(c.e_io for c in parts),
+        e_host=sum(c.e_host for c in parts))
 
 
 # ---------------------------------------------------------------------------

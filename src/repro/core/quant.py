@@ -113,6 +113,32 @@ def quantize_weights(w: jax.Array, spec: QuantSpec) -> QuantizedTensor:
                            col_sum=col_sum)
 
 
+def slice_quantized_cols(wq: QuantizedTensor, lo: int, hi: int
+                         ) -> QuantizedTensor:
+    """Column slice [lo, hi) of a quantized (N, M) weight tensor.
+
+    Slicing COMMUTES with quantization: scales are per-(group, column),
+    the zero point is a tensor-wide constant and `col_sum` is per output
+    column, so `slice_quantized_cols(quantize_weights(w), lo, hi)` equals
+    `quantize_weights(w[:, lo:hi])` code-for-code. This is the algebra the
+    fabric's column-chunk tensor-parallel GeMV rests on — each DIMM's
+    shard is a genuine quantized sub-matrix, so per-shard outputs are
+    bit-identical to the matching columns of the unsharded oracle.
+    """
+    if wq.values.ndim != 2:
+        raise ValueError(
+            f"column slicing needs a (N, M) weight tensor, got shape "
+            f"{tuple(wq.values.shape)}")
+    m = wq.values.shape[1]
+    if not 0 <= lo < hi <= m:
+        raise ValueError(
+            f"column slice [{lo}, {hi}) out of range for M={m}")
+    return QuantizedTensor(
+        values=wq.values[:, lo:hi], scale=wq.scale[:, lo:hi],
+        zero=wq.zero, spec=wq.spec,
+        col_sum=None if wq.col_sum is None else wq.col_sum[lo:hi])
+
+
 def quantize_activations(a: jax.Array, spec: QuantSpec) -> QuantizedTensor:
     """Quantize activations (..., N) per-row (per-token) to unsigned codes."""
     af = a.astype(jnp.float32)

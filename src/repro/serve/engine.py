@@ -105,12 +105,15 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, max_seq: int = 512,
                  batch_slots: int = 4, quantized: bool = False,
                  act_bits: Optional[int] = None, impl=None,
-                 mesh=None, rules=None, kv_bits: Optional[int] = None):
+                 mesh=None, rules=None, kv_bits: Optional[int] = None,
+                 dimms: int = 1, spill_tier: bool = False):
         self.cfg = cfg
         self.mesh, self.rules = mesh, rules
         self.max_seq = max_seq
         self.slots = batch_slots
         self.mvdram: Optional[MVDRAMEngine] = None
+        # GemvProgram on a single pool, FabricProgram when dimms > 1 or
+        # spill_tier — both price/run through the same surface
         self.decode_program: Optional[GemvProgram] = None
         # True when the model did not fit the DramPool and serving fell
         # back to the program-less jit path (surfaced in residency_stats —
@@ -124,8 +127,20 @@ class ServeEngine:
             # engine against those resident weights. on_full="raise" so a
             # model that outgrows the pool fails placement VISIBLY (and
             # falls back to program-less serving) instead of silently
-            # LRU-evicting the layers just placed
-            self.mvdram = MVDRAMEngine(on_full="raise")
+            # LRU-evicting the layers just placed.
+            # `dimms > 1` serves from a multi-module DRAM fabric (layers
+            # stripe across `FabricPool` members, the decode program
+            # compiles per-DIMM parts that overlap); `spill_tier=True`
+            # additionally lets placements that fit NO module park in the
+            # CXL capacity tier and page in on demand — a model larger
+            # than any single pool still gets a resident program
+            if dimms > 1 or spill_tier:
+                from ..core.pud.fabric import FabricPool
+                self.mvdram = MVDRAMEngine(
+                    pool=FabricPool(dimms=max(1, dimms)),
+                    on_full="spill" if spill_tier else "raise")
+            else:
+                self.mvdram = MVDRAMEngine(on_full="raise")
             self.decode_program = self._place_model(params, act_bits)
             model_impl = EngineLinear(self.mvdram,
                                       backend=backends.get_backend(impl))

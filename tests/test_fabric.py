@@ -1,0 +1,537 @@
+"""DRAM fabric (ISSUE 9): multi-DIMM sharded residency + tiered capacity.
+
+The load-bearing contracts:
+
+* A `FabricProgram` compiled over a multi-DIMM `FabricPool` produces
+  outputs AND per-(request, tile) runtime OpCounts bit-identical to the
+  single-pool `GemvProgram` oracle — staging and execution never depended
+  on placement, only wave packing and fault keys did.
+* One GeMV column-chunk sharded across modules (`register_sharded` /
+  `gemv_sharded`) host-reduces to the exact unsharded output (disjoint
+  column slices, GeMV linearity; `quant.slice_quantized_cols` commutes
+  with quantization code-for-code).
+* Cross-DIMM rebalancing and quarantine respect each other: migration
+  never lands a tenant on a quarantined bank, and fused fault keys follow
+  the layer to its new global (channel, bank) homes.
+* The spill tier lets a model larger than any single pool register,
+  compile and decode; every page-in's restaged bits reconcile EXACTLY
+  into `price_program`'s `t_spill_restage` via `CxlModel`.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import FabricProgram, MVDRAMEngine
+from repro.core.pud.fabric import (FabricPool, plan_column_shards,
+                                   requested_rows)
+from repro.core.pud.gemv import PudGeometry, mvdram_gemv
+from repro.core.pud.residency import CapacityError, ResidencyError
+from repro.core.quant import (QuantSpec, quantize_activations,
+                              quantize_weights, slice_quantized_cols)
+
+GEOM = PudGeometry(subarray_cols=32, n_sub_max=16,
+                   channels=2, banks_per_channel=2)
+# One subarray per bank and a thin row budget: a single 16-row chunk's
+# resident block (2 + 2·16 = 34 rows) fits once per bank, not twice.
+TINY = PudGeometry(subarray_rows=64, subarray_cols=32, n_sub_max=16,
+                   channels=1, banks_per_channel=2, subarrays_per_bank=1)
+# Same tiling as TINY with 4x the row budget: the oracle pool every
+# spill-tier launch must match bit-for-bit.
+TINY_BIG = dataclasses.replace(TINY, subarrays_per_bank=4)
+
+
+def _register(eng, rng, name, n, m, q=4, p=4):
+    w = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    return eng.register(name, w, QuantSpec(bits=q), a_spec=QuantSpec(bits=p))
+
+
+# ragged reduction chunks (n % n_sub != 0), ragged column chunks and mixed
+# q/p across the block
+_BLOCK = [("a", 40, 24, 4, 4), ("b", 40, 24, 4, 4), ("c", 40, 36, 2, 4),
+          ("d", 24, 40, 4, 2)]
+
+
+def _block(eng, seed=3):
+    rng = np.random.default_rng(seed)
+    return [_register(eng, rng, nm, n, m, q, p)
+            for nm, n, m, q, p in _BLOCK]
+
+
+# ---------------------------------------------------------------------------
+# Fabric program: bit-identity vs the single-pool oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dimms", [1, 2, 4])
+def test_fabric_program_bit_identical_to_single_pool(dimms, rng):
+    oracle = MVDRAMEngine(geom=GEOM)
+    ho = _block(oracle)
+    po = oracle.compile(ho, groups=[[0, 1], [2], [3]])
+
+    eng = MVDRAMEngine(geom=GEOM, pool=FabricPool(geom=GEOM, dimms=dimms))
+    hf = _block(eng)
+    pf = eng.compile(hf, groups=[[0, 1], [2], [3]])
+    assert isinstance(pf, FabricProgram)
+    assert sum(len(p.indices) for p in pf.parts) == len(hf)
+
+    B = 3
+    X = [jnp.asarray(rng.normal(size=(B, h.plan.n)), jnp.float32)
+         for h in ho]
+    for _step in range(2):
+        oo, ro = po.run(X)
+        of, rf = pf.run(X)
+        assert rf.fused and rf.batch == B
+        assert rf.spill_restage_bits == 0
+        for o1, o2 in zip(oo, of):
+            np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+        # per-(request, tile) runtime OpCounts identical, layer for layer
+        for r1, r2 in zip(ro.reports, rf.reports):
+            for b in range(B):
+                assert [c.asdict() for c in r1.requests[b].tile_runtime] \
+                    == [c.asdict() for c in r2.requests[b].tile_runtime]
+            assert r2.shared_preload.host_bits_written == 0
+        # one-time staging reconciles across program / pool / parts
+        assert rf.staged.host_bits_written \
+            == ro.staged.host_bits_written \
+            == sum(h.placement.staged.host_bits_written for h in hf)
+    assert pf.steps == 2
+
+
+def test_fabric_program_lane_mask_and_layer_major(rng):
+    oracle = MVDRAMEngine(geom=GEOM)
+    ho = _block(oracle)
+    po = oracle.compile(ho, b_max=4)
+    eng = MVDRAMEngine(geom=GEOM, pool=FabricPool(geom=GEOM, dimms=2))
+    hf = _block(eng)
+    pf = eng.compile(hf, b_max=4)
+    X = [jnp.asarray(rng.normal(size=(4, h.plan.n)), jnp.float32)
+         for h in ho]
+    mask = np.array([True, False, True, False])
+    oo, ro = po.run(X, lane_mask=mask)
+    of, rf = pf.run(X, lane_mask=mask)
+    assert rf.batch == 2 and rf.lanes == 4
+    for o1, o2 in zip(oo, of):
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+        assert not np.asarray(o2)[1].any() and not np.asarray(o2)[3].any()
+    # layer-major oracle path through the fabric
+    om, rm = pf.run(X, layer_major=True)
+    oo2, _ = po.run(X)
+    assert not rm.fused
+    for o1, o2 in zip(oo2, om):
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_fabric_price_overlaps_modules(rng):
+    """2 DIMMs: per-module parts overlap, so the fused compute term is the
+    max (not the sum) over modules and the scale-out speedup is real."""
+    eng = MVDRAMEngine(geom=GEOM, pool=FabricPool(geom=GEOM, dimms=2))
+    hf = _block(eng)
+    pf = eng.compile(hf)
+    homes = {eng.pool.dimm_of(h.name) for h in hf}
+    assert homes == {0, 1}                      # the cursor striped them
+    cost = pf.price(batch=2)
+    assert cost.dimms == 2 and len(cost.parts) == len(cost.part_dimms)
+    assert cost.t_serial_compute == pytest.approx(
+        sum(c.t_compute for c in cost.parts))
+    assert cost.t_compute == pytest.approx(
+        max(sum(c.t_compute for c, d in zip(cost.parts, cost.part_dimms)
+                if d == k) for k in homes))
+    assert cost.scaleout_speedup > 1.0
+    assert cost.t_total < cost.t_serial_total
+    d = cost.asdict()
+    assert d["scaleout_speedup"] == cost.scaleout_speedup
+    assert len(d["parts"]) == len(cost.parts)
+    # executed reconciliation matches the analytic wave structure
+    X = [jnp.asarray(rng.normal(size=(2, h.plan.n)), jnp.float32)
+         for h in hf]
+    _, rep = pf.run(X)
+    ce = pf.price(batch=2, executed=rep)
+    assert ce.t_spill_restage == 0.0
+    assert ce.waves == cost.waves
+
+
+# ---------------------------------------------------------------------------
+# Column-sharded GeMV: one matrix tensor-parallel across modules
+# ---------------------------------------------------------------------------
+
+def test_plan_column_shards_bounds():
+    plan = plan_column_shards(7, 3)
+    assert plan.chunk_bounds == (0, 3, 5, 7)    # sizes differ by <= 1
+    assert plan.shards == 3 and plan.col_chunks == 7
+    assert plan.bounds_cols(50, 8) == (0, 24, 40, 50)  # ragged tail clamps
+    assert plan_column_shards(2, 5).shards == 2  # capped at col_chunks
+    assert plan_column_shards(4, 1).chunk_bounds == (0, 4)
+    with pytest.raises(ValueError, match="column chunk"):
+        plan_column_shards(0, 2)
+    with pytest.raises(ValueError, match="shard"):
+        plan_column_shards(4, 0)
+
+
+def test_slice_quantized_cols_commutes_with_quantization(rng):
+    w = jnp.asarray(rng.normal(size=(32, 40)), jnp.float32)
+    spec = QuantSpec(bits=4)
+    wq = quantize_weights(w, spec)
+    for lo, hi in ((0, 16), (16, 40), (8, 24)):
+        sl = slice_quantized_cols(wq, lo, hi)
+        ref = quantize_weights(w[:, lo:hi], spec)
+        np.testing.assert_array_equal(np.asarray(sl.values),
+                                      np.asarray(ref.values))
+        np.testing.assert_array_equal(np.asarray(sl.scale),
+                                      np.asarray(ref.scale))
+        np.testing.assert_array_equal(np.asarray(sl.col_sum),
+                                      np.asarray(ref.col_sum))
+        assert sl.zero == ref.zero
+    with pytest.raises(ValueError, match="out of range"):
+        slice_quantized_cols(wq, 8, 48)
+
+
+@pytest.mark.parametrize("dimms,n,m,q,p", [
+    (1, 64, 96, 4, 4), (2, 64, 96, 4, 4), (4, 40, 52, 4, 4),
+    (2, 40, 52, 2, 4), (2, 24, 36, 4, 2),
+])
+def test_sharded_gemv_bit_identical_to_unsharded(dimms, n, m, q, p, rng):
+    w = jnp.asarray(rng.normal(size=(n, m)), jnp.float32)
+    eng = MVDRAMEngine(geom=GEOM, pool=FabricPool(geom=GEOM, dimms=dimms))
+    sh = eng.register_sharded("w", w, QuantSpec(bits=q),
+                              a_spec=QuantSpec(bits=p))
+    oracle = MVDRAMEngine(geom=GEOM)
+    hw = oracle.register("w", w, QuantSpec(bits=q), a_spec=QuantSpec(bits=p))
+    # shards live on distinct modules (until shards > dimms wraps)
+    assert {eng.pool.dimm_of(prt.name) for prt in sh.parts} \
+        == set(range(min(dimms, sh.shards)))
+    X = jnp.asarray(rng.normal(size=(3, n)), jnp.float32)
+    out, reps = eng.gemv_sharded(sh, X)
+    aq = quantize_activations(X, QuantSpec(bits=p))
+    ref, rref = mvdram_gemv(aq, hw.wq, geom=GEOM)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # per-(request, tile) OpCounts: shard tile (ci, cj) is oracle tile
+    # (ci, lo_chunk + cj) — tile_runtime is chunk-major over the grid
+    bounds = sh.plan.chunk_bounds
+    cc = sh.plan.col_chunks
+    for b in range(3):
+        oracle_tiles = rref.requests[b].tile_runtime
+        for d, rep in enumerate(reps):
+            st = eng.staged_for(sh.parts[d])
+            cc_d = bounds[d + 1] - bounds[d]
+            assert st.col_chunks == cc_d
+            for t, c in enumerate(rep.requests[b].tile_runtime):
+                ci, cj = divmod(t, cc_d)
+                ref_c = oracle_tiles[ci * cc + bounds[d] + cj]
+                assert c.asdict() == ref_c.asdict()
+    # single-vector promotion + lane mask
+    x1 = jnp.asarray(rng.normal(size=(n,)), jnp.float32)
+    o1, _ = eng.gemv_sharded("w", x1)
+    aq1 = quantize_activations(x1, QuantSpec(bits=p))
+    r1, _ = mvdram_gemv(aq1, hw.wq, geom=GEOM)
+    assert o1.ndim == 1
+    np.testing.assert_array_equal(np.asarray(o1), np.asarray(r1))
+    mask = np.array([True, False, True])
+    om, _ = eng.gemv_sharded("w", X, lane_mask=mask)
+    np.testing.assert_array_equal(np.asarray(om)[1], 0)
+    np.testing.assert_array_equal(np.asarray(om)[0], np.asarray(ref)[0])
+    np.testing.assert_array_equal(np.asarray(om)[2], np.asarray(ref)[2])
+
+
+def test_sharded_handle_staleness_and_eviction(rng):
+    eng = MVDRAMEngine(geom=GEOM, pool=FabricPool(geom=GEOM, dimms=2))
+    w = jnp.asarray(rng.normal(size=(32, 48)), jnp.float32)
+    sh = eng.register_sharded("w", w, QuantSpec(bits=4),
+                              a_spec=QuantSpec(bits=4))
+    sh2 = eng.register_sharded("w", w, QuantSpec(bits=4),
+                               a_spec=QuantSpec(bits=4))
+    x = jnp.asarray(rng.normal(size=(32,)), jnp.float32)
+    with pytest.raises(ValueError, match="stale sharded handle"):
+        eng.gemv_sharded(sh, x)
+    eng.evict(sh2.parts[0])
+    with pytest.raises(ValueError, match="no longer resident"):
+        eng.gemv_sharded(sh2, x)
+
+
+# ---------------------------------------------------------------------------
+# Numbered residency errors (the error-reporting satellite)
+# ---------------------------------------------------------------------------
+
+def test_fabric_capacity_error_carries_numbers():
+    pool = FabricPool(geom=TINY, dimms=2, compute_reserve=10)
+    pool.place("a", [16], 1)
+    pool.place("b", [16], 1)
+    pool.place("c", [16], 1)
+    pool.place("d", [16], 1)
+    rows = requested_rows([16, 16], 1)
+    with pytest.raises(CapacityError) as ei:
+        pool.place("e", [16, 16], 1)
+    msg = str(ei.value)
+    assert str(rows) in msg                     # requested rows
+    assert "dimm0" in msg and "dimm1" in msg    # per-DIMM occupancy
+    assert f"{pool.free_rows}" in msg           # fabric-wide free rows
+
+
+def test_fabric_residency_errors_carry_numbers():
+    pool = FabricPool(geom=TINY, dimms=2, compute_reserve=10)
+    pool.place("a", [16], 1)
+    with pytest.raises(ResidencyError, match=r"1 resident"):
+        pool.evict("ghost")
+    with pytest.raises(ResidencyError, match=r"already resident"):
+        pool.place("a", [16], 1)
+    with pytest.raises(ResidencyError, match=r"not resident"):
+        pool.spill("ghost")
+    with pytest.raises(ResidencyError, match=r"spill tier"):
+        pool.restage("a")
+    with pytest.raises(ResidencyError, match=r"valid range 0\.\.1"):
+        pool.quarantine_bank(7, 0)
+
+
+def test_single_pool_errors_carry_numbers(rng):
+    from repro.core.pud.residency import DramPool
+    pool = DramPool(TINY, compute_reserve=10)
+    pool.place("a", [16], 1)
+    with pytest.raises(ResidencyError, match=r"34 rows across 1 bank"):
+        pool.place("a", [16], 1)
+    with pytest.raises(ResidencyError,
+                       match=rf"{pool.free_rows}/{pool.total_rows}"):
+        pool.evict("ghost")
+
+
+# ---------------------------------------------------------------------------
+# Rebalancing × quarantine (the property-test satellite)
+# ---------------------------------------------------------------------------
+
+def _no_tenant_on_quarantined(pool):
+    quarantined = set(pool.quarantined())
+    for name, p in pool.placements.items():
+        for cb in p.banks:
+            assert cb not in quarantined, (name, cb)
+        for s in p.spans:
+            assert (s.channel, s.bank) not in quarantined, (name, s)
+
+
+def test_rebalance_never_lands_on_quarantined_bank():
+    """Seeded random place/evict/quarantine/compact/rebalance sequences:
+    no placement ever occupies a quarantined bank, and the fabric's global
+    bookkeeping (placements ↔ member pools) stays consistent."""
+    rng = np.random.default_rng(0)
+    for trial in range(8):
+        pool = FabricPool(geom=TINY, dimms=3, compute_reserve=10)
+        names = [f"t{trial}_{i}" for i in range(10)]
+        live = set()
+        for step in range(40):
+            op = rng.integers(0, 5)
+            name = names[int(rng.integers(0, len(names)))]
+            if op == 0:
+                try:
+                    pool.place(name, [16], 1,
+                               replace=pool.is_resident(name),
+                               on_full="evict")
+                    live.add(name)
+                except CapacityError:
+                    pass                       # every healthy bank full
+            elif op == 1 and name in live and pool.is_resident(name):
+                pool.evict(name)
+                live.discard(name)
+            elif op == 2:
+                ch = int(rng.integers(0, 3 * TINY.channels))
+                bk = int(rng.integers(0, TINY.banks_per_channel))
+                for victim in pool.quarantine_bank(ch, bk):
+                    live.discard(victim)
+            elif op == 3:
+                pool.compact()
+            else:
+                pool.rebalance(max_spread=0.1)
+            _no_tenant_on_quarantined(pool)
+            for nm, p in pool.placements.items():
+                d, local = pool.locate(nm)
+                assert pool._globalize(d, local).banks == p.banks
+        # residents the quarantine ladder didn't evict are still resident
+        assert {n for n in live if pool.is_resident(n)} \
+            == set(pool.placements) & set(names)
+
+
+def test_rebalance_migrates_from_hot_to_cold():
+    pool = FabricPool(geom=TINY, dimms=2, compute_reserve=10)
+    moved = []
+    pool.move_listeners.append(lambda n, old, new: moved.append(n))
+    for i in range(2):                          # both placements pinned home
+        pool.place(f"l{i}", [16], 1, dimm=0)
+    assert pool._healthy_utilization(1) == 0.0
+    out = pool.rebalance(max_spread=0.25)
+    assert out["migrated"] and moved == out["migrated"]
+    homes = {pool.dimm_of(f"l{i}") for i in range(2)}
+    assert homes == {0, 1}
+    assert pool.migrations == len(out["migrated"])
+    assert pool.migrated_bits > 0
+    # migrated placements got GLOBAL coordinates on the new module
+    for name in out["migrated"]:
+        d, local = pool.locate(name)
+        assert d == 1
+        assert all(c >= TINY.channels for c, _ in pool.placements[name].banks)
+
+
+def test_fault_keys_survive_fabric_migration(rng):
+    """Quarantine + migration move a layer's rows to another module; the
+    next fused run re-keys fault injection to the CURRENT global banks and
+    stays bit-identical to the clean single-pool oracle."""
+    from repro.core.pud.faults import FaultModel
+
+    oracle = MVDRAMEngine(geom=GEOM)
+    ho = _block(oracle)
+    po = oracle.compile(ho)
+    # weak cells everywhere but zero flip probability: injection exercises
+    # the keying machinery without corrupting anything
+    eng = MVDRAMEngine(geom=GEOM, pool=FabricPool(geom=GEOM, dimms=2),
+                       fault_model=FaultModel(weak_cell_rate=0.05,
+                                              weak_flip_prob=0.0, seed=3))
+    hf = _block(eng)
+    pf = eng.compile(hf)
+    X = [jnp.asarray(rng.normal(size=(2, h.plan.n)), jnp.float32)
+         for h in ho]
+    oo, _ = po.run(X)
+    of, _ = pf.run(X)
+    for o1, o2 in zip(oo, of):
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    # force churn: spill a layer off its module, restage it (it may land
+    # anywhere), then rebalance the rest
+    victim = hf[0].name
+    eng.pool.spill(victim)
+    eng.pool.restage(victim)
+    eng.pool.rebalance(max_spread=0.0)
+    of2, _ = pf.run(X)
+    for o1, o2 in zip(oo, of2):
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    # the fused fault keys track the layers' CURRENT global banks
+    for part in pf.parts:
+        keys = part.prog._fused.bank_keys
+        expect = np.asarray(
+            [part.prog.handles[s.layer].placement.banks[s.tile]
+             for s in part.prog.sched.slots], dtype=np.int64)
+        np.testing.assert_array_equal(keys, expect)
+        for h in part.handles:
+            d = eng.pool.dimm_of(h.name)
+            for c, _b in h.placement.banks:
+                assert c // GEOM.channels == d  # keys are global, per-module
+
+
+# ---------------------------------------------------------------------------
+# Spill tier: models larger than any single pool
+# ---------------------------------------------------------------------------
+
+def _spill_block(eng, n_layers=4, seed=0):
+    rng = np.random.default_rng(seed)
+    ws = [jnp.asarray(rng.normal(size=(16, 8)), jnp.float32)
+          for _ in range(n_layers)]
+    hs = [eng.register(f"l{i}", w, QuantSpec(bits=4),
+                       a_spec=QuantSpec(bits=4))
+          for i, w in enumerate(ws)]
+    return hs, ws
+
+
+def test_spill_tier_registers_compiles_decodes(rng):
+    """4 layers on a fabric that holds 2: registration spills the cold
+    half, compile produces a program with page-in parts, decode pages
+    layers in on demand and stays bit-identical to a big-pool oracle, and
+    the paid restage bits reconcile EXACTLY into the priced step."""
+    pool = FabricPool(geom=TINY, dimms=1, compute_reserve=10)
+    eng = MVDRAMEngine(geom=TINY, pool=pool, on_full="spill")
+    hs, ws = _spill_block(eng)
+    assert len(pool.placements) == 2 and len(pool.spilled()) == 2
+    prog = eng.compile([h.name for h in hs])
+    assert isinstance(prog, FabricProgram)
+    assert sum(1 for p in prog.parts if p.prog is None) == 2
+
+    big = MVDRAMEngine(geom=TINY_BIG)
+    hb = [big.register(f"l{i}", w, QuantSpec(bits=4),
+                       a_spec=QuantSpec(bits=4))
+          for i, w in enumerate(ws)]
+    pb = big.compile([h.name for h in hb])
+    X = [jnp.asarray(rng.normal(size=(2, 16)), jnp.float32) for _ in hs]
+    outs, rep = prog.run(X)
+    outs_b, _ = pb.run(X)
+    for o1, o2 in zip(outs_b, outs):
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+    assert rep.spill_restages == 2              # the two cold layers paged
+    assert rep.spill_restage_bits \
+        == 2 * requested_rows([16], 1) * TINY.subarray_cols
+
+    cost = prog.price(batch=2, executed=rep)
+    assert cost.spill_restage_bits == rep.spill_restage_bits
+    assert cost.spill_restages == rep.spill_restages
+    # EXACT reconciliation against the CXL tier model
+    assert cost.t_spill_restage == eng.cxl.restage_time(
+        rep.spill_restage_bits, rep.spill_restages)
+    assert cost.t_spill_restage > 0
+    # removing the restage term recovers the resident-only price
+    assert cost.t_total - cost.t_spill_restage == pytest.approx(
+        cost.t_total * (1 - cost.t_spill_restage / cost.t_total))
+    # pool ledger agrees with the per-run bill
+    assert pool.spill_restaged_bits == rep.spill_restage_bits
+    assert pool.spill_restages == rep.spill_restages
+    # analytic pricing (no executed report) bills the CURRENTLY spilled
+    # entries from the ledger instead
+    c2 = prog.price(batch=2)
+    assert c2.spill_restage_bits \
+        == sum(pool.spill_entry(n).bits for n in pool.spilled())
+    stats = eng.residency_stats()
+    assert stats["spills"] == pool.spills
+    assert stats["spill_restaged_bits"] == pool.spill_restaged_bits
+
+
+def test_spill_thrash_stays_exact(rng):
+    """Repeated decode over an oversubscribed fabric keeps paging (LRU
+    thrash) yet every step's outputs stay bit-identical and every step's
+    restage bits reconcile exactly."""
+    pool = FabricPool(geom=TINY, dimms=1, compute_reserve=10)
+    eng = MVDRAMEngine(geom=TINY, pool=pool, on_full="spill")
+    hs, ws = _spill_block(eng)
+    prog = eng.compile([h.name for h in hs])
+    big = MVDRAMEngine(geom=TINY_BIG)
+    hb = [big.register(f"l{i}", w, QuantSpec(bits=4),
+                       a_spec=QuantSpec(bits=4))
+          for i, w in enumerate(ws)]
+    pb = big.compile([h.name for h in hb])
+    X = [jnp.asarray(rng.normal(size=(16,)), jnp.float32) for _ in hs]
+    for _step in range(3):
+        outs, rep = prog.run(X)
+        outs_b, _ = pb.run(X)
+        for o1, o2 in zip(outs_b, outs):
+            np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+        cost = prog.price(batch=1, executed=rep)
+        assert cost.t_spill_restage == eng.cxl.restage_time(
+            rep.spill_restage_bits, rep.spill_restages)
+        assert rep.spill_restages >= 2          # thrash: both halves page
+
+
+def test_spill_tier_pins_and_errors():
+    pool = FabricPool(geom=TINY, dimms=1, compute_reserve=10)
+    pool.place("pinned", [16], 1)
+    pool.placements["pinned"] = dataclasses.replace(
+        pool.placements["pinned"], pinned=True)
+    with pytest.raises(ResidencyError, match="pinned"):
+        pool.spill("pinned")
+    with pytest.raises(ValueError, match="on_full"):
+        pool.place("x", [16], 1, on_full="bogus")
+
+
+def test_serve_engine_on_fabric_with_spill():
+    """A quantized ServeEngine on a 2-DIMM fabric decodes the same tokens
+    as the single-pool engine and prices a FabricCost."""
+    import jax
+    from repro.configs import tiny_config
+    from repro.models.model import param_defs
+    from repro.models.params import init_params
+    from repro.serve.engine import ServeEngine
+
+    cfg = dataclasses.replace(tiny_config("llama2-7b"), dtype="float32")
+    params = init_params(param_defs(cfg), jax.random.PRNGKey(0))
+    e1 = ServeEngine(cfg, params, max_seq=32, quantized=True, act_bits=4)
+    e2 = ServeEngine(cfg, params, max_seq=32, quantized=True, act_bits=4,
+                     dimms=2, spill_tier=True)
+    assert isinstance(e2.decode_program, FabricProgram)
+    prompts = jnp.asarray(np.random.default_rng(0).integers(
+        0, cfg.vocab_size, size=(2, 4)))
+    t1 = np.asarray(e1.generate(prompts, max_new=3))
+    t2 = np.asarray(e2.generate(prompts, max_new=3))
+    np.testing.assert_array_equal(t1, t2)
+    d = e2.price_decode_step()
+    assert d["dimms"] == 2 and d["scaleout_speedup"] >= 1.0
+    stats = e2.residency_stats()
+    assert stats["dimms"] == 2 and not stats["placement_fallback"]

@@ -185,9 +185,11 @@ def test_prefill_chunk_invariance():
 
 
 def test_no_bare_assert_in_serve():
-    """Serve- and kernel-path input validation must raise ValueError with
-    shapes, not bare asserts that vanish under -O (PR 6 policy, extended
-    to serve/ and, since PR 8, the whole kernels/ tree)."""
+    """Serve-, kernel- and PUD-path input validation must raise ValueError
+    with shapes, not bare asserts that vanish under -O (PR 6 policy,
+    extended to serve/, since PR 8 the whole kernels/ tree, and since PR 9
+    the whole core/pud/ tree — the fabric/residency error-reporting
+    satellite)."""
     import pathlib
     import re
 
@@ -195,6 +197,7 @@ def test_no_bare_assert_in_serve():
     banned = re.compile(r"^\s*assert\b", re.MULTILINE)
     files = sorted(root.joinpath("serve").glob("*.py"))
     files += sorted(root.joinpath("kernels").rglob("*.py"))
+    files += sorted(root.joinpath("core", "pud").rglob("*.py"))
     offenders = [str(p.relative_to(root)) for p in files
                  if banned.search(p.read_text())]
     assert not offenders, \

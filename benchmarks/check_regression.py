@@ -4,7 +4,8 @@ Two modes, composable in one invocation:
 
   regression gate (pull_request CI):
       python -m benchmarks.check_regression BENCH_new1.json BENCH_new2.json \
-          --baseline BENCH_sim.json --max-drop 0.25
+          --baseline BENCH_sim.json --max-drop 0.25 \
+          --directions benchmarks/bench_rows.txt
     Every speedup/amortization row (name ending in `_speedup_x` or
     `_amortization_x`) present in the BASELINE must exist in the new run
     and may not drop more than `--max-drop` below the committed value —
@@ -15,15 +16,31 @@ Two modes, composable in one invocation:
     bandwidth-bound side of a ratio, so one slow window must not fail a
     healthy PR — a real regression is slow in EVERY independent run.
 
+    The gate is DIRECTION-AWARE: a manifest line may carry an explicit
+    `up` or `down` column after the row name (`--directions` points at
+    the same manifest the nightly uses). `down` rows are lower-is-better
+    — energy rows like `sim.energy_step_ddr4_j` — so the >max-drop gate
+    flips sign: the row fails when it RISES more than `max_drop` above
+    the baseline, and `merge_best` keeps the per-row MIN across runs
+    (least contention-polluted is smallest for a cost). Suffix-gated
+    ratio rows default to `up`; an explicit `up` column also gates a row
+    whose name matches no suffix (e.g. `sim.energy_ratio_vs_cpu`).
+
   row manifest (nightly CI):
       python -m benchmarks.check_regression BENCH_sim.json \
           --require-rows benchmarks/bench_rows.txt
-    Every row named in the manifest (one per line, `#` comments) must be
-    present with a finite positive value, and the run must have recorded
-    zero `.ERROR` entries. This replaces per-row `grep` lines in the
-    workflow: a new bench row is guarded by ADDING ONE MANIFEST LINE, and
-    a row that silently disappears (renamed, crashed, filtered) fails the
-    job instead of going unchecked.
+    Every row named in the manifest (one per line, optional direction
+    column, `#` comments) must be present with a finite positive value,
+    and the run must have recorded zero `.ERROR` entries. This replaces
+    per-row `grep` lines in the workflow: a new bench row is guarded by
+    ADDING ONE MANIFEST LINE, and a row that silently disappears
+    (renamed, crashed, filtered) fails the job instead of going
+    unchecked.
+
+`--step-summary PATH` additionally appends a human-readable markdown
+delta table (baseline vs new vs floor/ceiling, per gated row) — pointed
+at `$GITHUB_STEP_SUMMARY` by the PR gate so the comparison reads off
+the Actions run page instead of the artifact JSON.
 
 Exit status 0 = all checks pass; 1 = any failure (each printed).
 """
@@ -35,6 +52,7 @@ import math
 import sys
 
 GATED_SUFFIXES = ("_speedup_x", "_amortization_x")
+DIRECTIONS = ("up", "down")
 
 
 def load_doc(path: str) -> dict:
@@ -49,17 +67,30 @@ def rows_by_name(doc: dict) -> dict:
     return {r["name"]: r["value"] for r in doc["rows"]}
 
 
-def merge_best(docs) -> dict:
-    """Merge several runs' rows into one name→value map keeping the MAX
-    per row — gated rows are speedup ratios, so the best of N independent
-    runs is the least contention-polluted measurement of each."""
+def row_direction(name: str, directions=None) -> str | None:
+    """Gate direction of a row: the manifest's explicit column wins,
+    ratio-suffix rows default to 'up', everything else is ungated."""
+    if directions and name in directions:
+        return directions[name]
+    if name.endswith(GATED_SUFFIXES):
+        return "up"
+    return None
+
+
+def merge_best(docs, directions=None) -> dict:
+    """Merge several runs' rows into one name→value map keeping the BEST
+    per row — the least contention-polluted measurement of each, which is
+    the MAX for higher-is-better rows (speedup ratios, the default) and
+    the MIN for explicit `down` rows (costs like priced energy)."""
     merged: dict = {}
     for doc in docs:
         for name, value in rows_by_name(doc).items():
             if not isinstance(value, (int, float)) \
                     or not math.isfinite(value):
                 continue
-            if name not in merged or value > merged[name]:
+            down = row_direction(name, directions) == "down"
+            if name not in merged or (value < merged[name] if down
+                                      else value > merged[name]):
                 merged[name] = value
     return merged
 
@@ -71,13 +102,23 @@ def check_errors(doc: dict, label: str) -> list:
             for e in doc.get("errors", [])]
 
 
-def check_drop(new_rows: dict, base_doc: dict, max_drop: float) -> list:
-    """Gated ratio rows of the baseline must survive in the new run
+def gate_bound(base: float, direction: str, max_drop: float) -> float:
+    """The failing threshold for one row: a floor below the baseline for
+    `up` rows, a ceiling above it for `down` rows."""
+    return base * ((1.0 + max_drop) if direction == "down"
+                   else (1.0 - max_drop))
+
+
+def check_drop(new_rows: dict, base_doc: dict, max_drop: float,
+               directions=None) -> list:
+    """Gated rows of the baseline must survive in the new run
     (`new_rows`: name→value, e.g. `merge_best` of the run files) within
-    (1 - max_drop)× the committed value."""
+    (1 - max_drop)× the committed value — or, for `down` rows, within
+    (1 + max_drop)× (a cost regressing is a RISE)."""
     failures = []
     for name, base in sorted(rows_by_name(base_doc).items()):
-        if not name.endswith(GATED_SUFFIXES):
+        direction = row_direction(name, directions)
+        if direction is None:
             continue
         if not isinstance(base, (int, float)) or not math.isfinite(base):
             continue
@@ -87,24 +128,49 @@ def check_drop(new_rows: dict, base_doc: dict, max_drop: float) -> list:
                 f"the new run")
             continue
         new = new_rows[name]
-        floor = base * (1.0 - max_drop)
+        bound = gate_bound(base, direction, max_drop)
         if not isinstance(new, (int, float)) or not math.isfinite(new):
             failures.append(f"gated row {name!r} is not finite: {new!r}")
-        elif new < floor:
+        elif direction == "down" and new > bound:
+            failures.append(
+                f"{name}: {new:.4g} rose >{max_drop:.0%} above the "
+                f"baseline {base:.4g} (ceiling {bound:.4g}; "
+                f"lower-is-better row)")
+        elif direction == "up" and new < bound:
             failures.append(
                 f"{name}: {new:.4g} dropped >{max_drop:.0%} below the "
-                f"baseline {base:.4g} (floor {floor:.4g})")
+                f"baseline {base:.4g} (floor {bound:.4g})")
     return failures
 
 
 def read_manifest(path: str) -> list:
+    """Row NAMES from a manifest (first token per line; an optional
+    direction column and `#` comments are ignored)."""
     names = []
     with open(path) as f:
         for line in f:
-            line = line.split("#", 1)[0].strip()
-            if line:
-                names.append(line)
+            parts = line.split("#", 1)[0].split()
+            if parts:
+                names.append(parts[0])
     return names
+
+
+def read_directions(path: str) -> dict:
+    """name → 'up' | 'down' for manifest rows carrying an explicit
+    direction column; rows without one are absent (suffix-gated rows
+    default to 'up' via `row_direction`)."""
+    directions: dict = {}
+    with open(path) as f:
+        for ln, line in enumerate(f, 1):
+            parts = line.split("#", 1)[0].split()
+            if len(parts) <= 1:
+                continue
+            if len(parts) > 2 or parts[1] not in DIRECTIONS:
+                raise ValueError(
+                    f"{path}:{ln}: expected '<row-name> [up|down]', "
+                    f"got {line.strip()!r}")
+            directions[parts[0]] = parts[1]
+    return directions
 
 
 def check_required(rows: dict, required) -> list:
@@ -123,6 +189,45 @@ def check_required(rows: dict, required) -> list:
     return failures
 
 
+def step_summary_table(new_rows: dict, base_doc: dict, max_drop: float,
+                       directions=None, run_labels=()) -> str:
+    """Markdown delta table of every gated baseline row: committed value,
+    per-row best of the new runs, the failing floor/ceiling, the relative
+    delta, and the verdict — what lands in `$GITHUB_STEP_SUMMARY`."""
+    base_rows = rows_by_name(base_doc)
+    lines = ["## Bench regression gate", ""]
+    if run_labels:
+        lines += [f"Per-row best of {len(run_labels)} run(s): "
+                  + ", ".join(f"`{r}`" for r in run_labels), ""]
+    lines += [f"| row | dir | baseline | new (best) | "
+              f"{'floor / ceiling'} | Δ | gate |",
+              "|---|---|---:|---:|---:|---:|---|"]
+    for name, base in sorted(base_rows.items()):
+        direction = row_direction(name, directions)
+        if direction is None or not isinstance(base, (int, float)) \
+                or not math.isfinite(base):
+            continue
+        bound = gate_bound(base, direction, max_drop)
+        new = new_rows.get(name)
+        if not isinstance(new, (int, float)) or not math.isfinite(new):
+            verdict, delta, new_s = "❌ missing", "—", "—"
+        else:
+            delta = f"{(new - base) / base:+.2%}"
+            new_s = f"{new:.4g}"
+            regressed = (new > bound if direction == "down"
+                         else new < bound)
+            verdict = "❌ fail" if regressed else "✅ ok"
+        lines.append(f"| `{name}` | {direction} | {base:.4g} | {new_s} | "
+                     f"{bound:.4g} | {delta} | {verdict} |")
+    added = sorted(n for n in new_rows
+                   if n not in base_rows
+                   and row_direction(n, directions) is not None)
+    if added:
+        lines += ["", "New gated rows (enter the baseline when it is "
+                  "re-committed): " + ", ".join(f"`{n}`" for n in added)]
+    return "\n".join(lines) + "\n"
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("new_json", nargs="+",
@@ -132,28 +237,49 @@ def main(argv=None) -> int:
                     help="committed baseline JSON for the >max-drop gate")
     ap.add_argument("--max-drop", type=float, default=0.25,
                     help="max allowed fractional drop of a gated ratio row "
-                         "below the baseline (default 0.25)")
+                         "below the baseline (default 0.25); for `down` "
+                         "rows, max allowed fractional RISE above it")
+    ap.add_argument("--directions", default=None, metavar="MANIFEST",
+                    help="manifest whose optional per-row up/down column "
+                         "sets gate directions (energy rows gate "
+                         "lower-is-better)")
     ap.add_argument("--require-rows", default=None, metavar="MANIFEST",
                     help="row-name manifest every run must produce")
+    ap.add_argument("--step-summary", default=None, metavar="PATH",
+                    help="append a markdown baseline-vs-new delta table "
+                         "here (point at $GITHUB_STEP_SUMMARY)")
     args = ap.parse_args(argv)
     if args.baseline is None and args.require_rows is None:
         ap.error("nothing to check: pass --baseline and/or --require-rows")
     if not 0.0 < args.max_drop < 1.0:
         ap.error(f"--max-drop must be in (0, 1), got {args.max_drop}")
+    if args.step_summary is not None and args.baseline is None:
+        ap.error("--step-summary needs --baseline (it tabulates the "
+                 "baseline delta)")
 
+    directions = (read_directions(args.directions)
+                  if args.directions is not None else None)
     new_docs = [load_doc(p) for p in args.new_json]
     failures = []
     for path, doc in zip(args.new_json, new_docs):
         failures += check_errors(doc, path)
-    new_rows = merge_best(new_docs)
+    new_rows = merge_best(new_docs, directions)
     checked = []
     if args.baseline is not None:
         base_doc = load_doc(args.baseline)
-        failures += check_drop(new_rows, base_doc, args.max_drop)
+        failures += check_drop(new_rows, base_doc, args.max_drop,
+                               directions)
         gated = [n for n in rows_by_name(base_doc)
-                 if n.endswith(GATED_SUFFIXES)]
-        checked.append(f"{len(gated)} gated ratio rows vs {args.baseline} "
+                 if row_direction(n, directions) is not None]
+        checked.append(f"{len(gated)} gated rows vs {args.baseline} "
                        f"(max drop {args.max_drop:.0%})")
+        if args.step_summary is not None:
+            table = step_summary_table(new_rows, base_doc, args.max_drop,
+                                       directions,
+                                       run_labels=args.new_json)
+            with open(args.step_summary, "a") as f:
+                f.write(table)
+            checked.append(f"delta table → {args.step_summary}")
     if args.require_rows is not None:
         required = read_manifest(args.require_rows)
         failures += check_required(new_rows, required)

@@ -54,9 +54,10 @@ from .pud.gemv import (CommandTemplates, GemvCost, PudGeometry, StagedWaves,
 from .pud.residency import CapacityError, DramPool, Placement
 from .pud.schedule import (ProgramSchedule, schedule_batch, schedule_program,
                            schedule_tiles)
-from .pud.timing import (CXL_TIER, DDR4_2400, CpuBaseline, CxlModel,
-                         DDR4Model, FabricCost, GpuBaseline, ProgramCost,
-                         combine_fabric_costs, price_gemv, price_program)
+from .pud.timing import (CXL_TIER, DDR4_2400, DDR4_ENERGY, CpuBaseline,
+                         CxlModel, DDR4Model, EnergyModel, FabricCost,
+                         GpuBaseline, ProgramCost, combine_fabric_costs,
+                         price_gemv, price_program)
 from .quant import (QuantSpec, QuantizedTensor, quantize_activations,
                     quantize_weights, slice_quantized_cols)
 
@@ -177,7 +178,8 @@ class ProgramReport:
     def __init__(self, reports=None, builder=None, fused: bool = False,
                  waves: int = 0, wave_max_arr=None, batch: int = 1,
                  retry_wave_ops=(), fault: Optional[FaultTrace] = None,
-                 lanes: Optional[int] = None):
+                 lanes: Optional[int] = None, counts_total_arr=None,
+                 encode_ops=None):
         self._reports = reports
         self._builder = builder
         self.fused = fused
@@ -193,6 +195,33 @@ class ProgramReport:
         # PUD op bill) — `price_program(..., executed=...)` reconciles them
         self.retry_wave_ops = tuple(retry_wave_ops)
         self.fault = fault          # merged FaultTrace (None = faults off)
+        # complete executed command ledger of the step (retries included)
+        # and per-layer host encode ops of the speculative-encode walk —
+        # the per-command ENERGY reconciliation inputs; None on hand-built
+        # or layer-major reports (pricing falls back to the analytic model)
+        self._counts_total_arr = counts_total_arr
+        self.encode_ops = (tuple(int(e) for e in encode_ops)
+                           if encode_ops is not None else None)
+
+    @property
+    def executed_counts(self):
+        """`OpCounts` of EVERYTHING the step executed (lanes and tiles
+        summed, fault-retry re-bills included) — exactly what the resident
+        banks' ledgers recorded. None when the run carried no array-native
+        total."""
+        if self._counts_total_arr is None:
+            return None
+        from .pud.device import OpCounts
+        return OpCounts.from_vector(self._counts_total_arr)
+
+    @property
+    def retry_counts(self):
+        """`OpCounts` slice of `executed_counts` that fault retries
+        re-billed (empty on fault-free runs)."""
+        from .pud.device import OpCounts
+        if self.fault is None:
+            return OpCounts()
+        return self.fault.retry_counts
 
     @property
     def reports(self) -> tuple:
@@ -412,7 +441,9 @@ class GemvProgram:
             builder=_resident_report_builder(staged, res, self.engine.geom),
             fused=True, waves=res.waves, wave_max_arr=res.wave_max,
             batch=active, lanes=lanes,
-            retry_wave_ops=res.retry_wave_ops, fault=res.fault)
+            retry_wave_ops=res.retry_wave_ops, fault=res.fault,
+            counts_total_arr=res.counts_total,
+            encode_ops=res.encode_layer_ops)
         outs = [jnp.asarray(o) for o in res.outs]
         if res.fault is not None:
             self.engine._record_fault(res.fault)
@@ -731,7 +762,8 @@ class MVDRAMEngine:
                  on_full: str = "evict",
                  fault_model: Optional[FaultModel] = None,
                  fault_policy: Optional[FaultPolicy] = None,
-                 cxl: Optional[CxlModel] = None):
+                 cxl: Optional[CxlModel] = None,
+                 energy: Optional[EnergyModel] = None):
         self.geom = geom
         self.timing = timing
         self.cpu = cpu
@@ -741,6 +773,9 @@ class MVDRAMEngine:
         self.on_full = on_full
         # CXL capacity-tier constants pricing FabricPool spill restages
         self.cxl = cxl if cxl is not None else CXL_TIER
+        # per-command energy pricing of program steps (EnergyModel.zero()
+        # makes every priced e_* term exactly 0.0)
+        self.energy = energy if energy is not None else DDR4_ENERGY
         # fault injection + recovery ladder: FaultModel.none() yields NO
         # session, so the default engine takes the exact pre-fault paths
         self.fault_model = (fault_model if fault_model is not None
@@ -1281,11 +1316,23 @@ class MVDRAMEngine:
         measured per-wave maxima (B lanes already summed) replace
         `bit_density`-expected ops, turning the program price into a
         measurement. Only valid at the simulated column width (that is
-        what executed) and for a fused run's report."""
+        what executed) and for a fused run's report.
+
+        An executed report additionally reconciles ENERGY and ENCODE: the
+        run's complete command ledger (`executed_counts`, retry re-bills
+        split back out via `retry_counts`) prices `e_*` per command
+        through the engine's `EnergyModel`, and the speculative-encode
+        walk's per-layer `encode_ops` feed the pipelined encode timeline
+        — `e_total` then equals the ledger's energy bit-for-bit (tested),
+        and `t_encode_extra` is a measurement of the overlap the executor
+        actually ran."""
         cols = usable_cols if usable_cols is not None else \
             self.geom.subarray_cols
         executed_wave_ops = None
         retry_wave_ops = None
+        executed_counts = None
+        retry_counts = None
+        executed_encode_ops = None
         if executed is not None:
             if cols != self.geom.subarray_cols:
                 raise ValueError(
@@ -1306,6 +1353,10 @@ class MVDRAMEngine:
             # ABFT fault-retry waves the step executed beyond the schedule
             # reconcile as an explicit extra serialization term (t_retry)
             retry_wave_ops = executed.retry_wave_ops or None
+            executed_counts = executed.executed_counts
+            if executed_counts is not None:
+                retry_counts = executed.retry_counts
+            executed_encode_ops = executed.encode_ops
         costs = []
         for h in program.handles:
             p = h.plan
@@ -1327,7 +1378,10 @@ class MVDRAMEngine:
                              retry_wave_ops=retry_wave_ops,
                              spill_restage_bits=spill_restage_bits,
                              spill_restages=spill_restages,
-                             spill=self.cxl)
+                             spill=self.cxl, energy=self.energy,
+                             executed_counts=executed_counts,
+                             retry_counts=retry_counts,
+                             executed_encode_ops=executed_encode_ops)
 
     def _provisional_part_prog(self, part: "_FabricPart") -> GemvProgram:
         """A throwaway schedule for a spilled part that has never been

@@ -48,6 +48,24 @@ class OpCounts:
     def asdict(self):
         return dataclasses.asdict(self)
 
+    @classmethod
+    def from_vector(cls, vec) -> "OpCounts":
+        """An `OpCounts` from a `_COUNT_FIELDS`-ordered count vector — the
+        array-native form the `BankArray` ledger and the program executor
+        carry (`counts_matrix` rows, `ProgramRunResult.counts_total`)."""
+        vec = [int(v) for v in vec]
+        if len(vec) != len(_COUNT_FIELDS):
+            raise ValueError(
+                f"count vector has {len(vec)} entries, "
+                f"expected {len(_COUNT_FIELDS)}")
+        return cls(*vec)
+
+    def vector(self) -> np.ndarray:
+        """The `_COUNT_FIELDS`-ordered int64 vector form (inverse of
+        `from_vector`)."""
+        return np.asarray([getattr(self, f) for f in _COUNT_FIELDS],
+                          dtype=np.int64)
+
 
 _COUNT_FIELDS = tuple(f.name for f in dataclasses.fields(OpCounts))
 

@@ -451,6 +451,14 @@ class FabricPool:
         self.spill_restaged_bits += placement.staged.host_bits_written
         return placement
 
+    def spill_ledger(self) -> tuple:
+        """(spill_restaged_bits, spill_restages) snapshot — the page-in
+        traffic counters a caller diffs around a decode step to attribute
+        that step's CXL traffic (`FabricReport.part_spill_bits` does this
+        per part; `timing.price_program` prices the bits into
+        `t_spill_restage` and, per command, `e_spill`)."""
+        return (self.spill_restaged_bits, self.spill_restages)
+
     # -- bank health ---------------------------------------------------------
 
     def _split_channel(self, channel: int) -> tuple:

@@ -45,6 +45,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from .device import OpCounts
+
 # Sub-stream tag separating weak-cell map derivation from the session's
 # transient stream (np.random.default_rng accepts a seed sequence).
 _WEAK_STREAM = 0x57EAC
@@ -116,6 +118,12 @@ class FaultTrace:
     detected: int = 0           # of those, cells the ABFT checksum flagged
     retries: int = 0            # wave-segment re-executions performed
     retry_wave_ops: list = dataclasses.field(default_factory=list)
+    # Complete per-command ledger of the retries: each re-executed wave
+    # segment re-bills its full `OpCounts` slice (commands, readout bits,
+    # host ops), merged here so `timing.price_program` can price retry
+    # ENERGY exactly (`EnergyModel.ledger_energy`), next to the
+    # `retry_wave_ops` time bill. Empty OpCounts on fault-free runs.
+    retry_counts: "OpCounts" = dataclasses.field(default_factory=OpCounts)
     unresolved: list = dataclasses.field(default_factory=list)
     #                 ^ (request, layer, tile) cells corrupt past the budget
     unresolved_banks: list = dataclasses.field(default_factory=list)
@@ -131,6 +139,7 @@ class FaultTrace:
         self.detected += other.detected
         self.retries += other.retries
         self.retry_wave_ops.extend(other.retry_wave_ops)
+        self.retry_counts = self.retry_counts.merge(other.retry_counts)
         self.unresolved.extend(other.unresolved)
         for cb in other.unresolved_banks:
             if cb not in self.unresolved_banks:

@@ -1517,6 +1517,15 @@ class ProgramRunResult:
     # launch's `FaultTrace`; empty/None on fault-free runs.
     retry_wave_ops: list = dataclasses.field(default_factory=list)
     fault: Optional[FaultTrace] = None
+    # Energy accounting: the step's COMPLETE executed command ledger
+    # (`_COUNT_FIELDS`-ordered, lanes+tiles summed, retry re-bills
+    # included — exactly what the resident banks recorded), and the
+    # per-layer host encode ops the speculative-encode walk performed
+    # (active lanes only). `timing.price_program(executed_counts=…,
+    # executed_encode_ops=…)` reconciles `e_total` / `t_encode` against
+    # these.
+    counts_total: Optional[np.ndarray] = None      # (_F,)
+    encode_layer_ops: Optional[np.ndarray] = None  # (L,)
 
     @property
     def waves(self) -> int:
@@ -1550,6 +1559,11 @@ def _verify_and_retry_wave(plan: FusedProgram, wv: FusedWave,
     # of this wave costs (identical math to the base `wave_max` rows)
     wave_pud = int(counts_all.sum(axis=0)[lo:hi][:, _PUD_I]
                    .sum(axis=-1).max())
+    # full per-command bill of ONE re-execution of this wave (all member
+    # tiles, lanes summed) — what each retry re-charges into the bank
+    # ledgers below, mirrored into the trace so energy pricing can split
+    # the retry slice back out of the executed total
+    wave_counts = OpCounts.from_vector(counts_all[:, lo:hi].sum(axis=(0, 1)))
     tries = 0
     while detected.any() and tries < max_retries:
         tries += 1
@@ -1566,6 +1580,7 @@ def _verify_and_retry_wave(plan: FusedProgram, wv: FusedWave,
                 counts_all[:, lo + seg.lo:lo + seg.hi], tiles=seg.pos)
         trace.retries += 1
         trace.retry_wave_ops.append(wave_pud)
+        trace.retry_counts = trace.retry_counts.merge(wave_counts)
         retry_wave_ops.append(wave_pud)
     if detected.any():
         for b, t in zip(*np.nonzero(detected)):
@@ -1615,6 +1630,16 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
     back zero. Active lanes are bit-identical — outputs AND per-(request,
     tile) OpCounts — to a compacted fixed-B launch of just those lanes
     (property-tested).
+
+    Host-side encoding is SPECULATIVE: instead of encoding all L layers
+    up front, the walk encodes each layer (in layer order) just before
+    the first wave that executes one of its tiles — layer k+1's encode
+    runs under layer k's waves, the §V-E overlap extended across the
+    fused program. Encoding order cannot change any value (each layer's
+    codes are read only by its own slots), so outputs and ledgers stay
+    bit-identical to the up-front executor; what changes is the pipeline
+    the step exposes, which `timing.price_program` now prices with the
+    matching `_encode_timeline` and the run's own `encode_layer_ops`.
     """
     L = plan.layers
     if len(aqs) != L or len(wqs) != L:
@@ -1622,13 +1647,10 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
                          f"a {L}-layer plan")
     if templates_list is None:
         templates_list = [None] * L
-    cols = plan.geom.subarray_cols
     C_total = int(plan.chunk0[-1])
-    a_us, aggs = [], []
+    a_us = []
     B = None
-    codes_g = popc_g = None
-    skipped, r_bits_l = [], []
-    for l, (aq, st) in enumerate(zip(aqs, plan.stageds)):
+    for l, aq in enumerate(aqs):
         a_u = np.asarray(aq.values, dtype=np.uint32)
         if a_u.ndim != 2:
             raise ValueError(
@@ -1636,22 +1658,11 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
                 f"{l} got shape {a_u.shape}")
         if B is None:
             B = a_u.shape[0]
-            codes_g = np.zeros((B, C_total, plan.n_pad), dtype=np.float32)
-            popc_g = np.zeros((B, C_total, plan.p_max), dtype=np.int64)
         elif a_u.shape[0] != B:
             raise ValueError(
                 f"every layer shares the decode lane batch: layer {l} has "
                 f"B={a_u.shape[0]}, layer 0 has B={B}")
-        codes, popc, zeros, sk, rb = _chunk_arrays_batched(
-            a_u, st.n, st.n_sub, st.p, sparsity, templates_list[l])
-        for ci in range(st.n_chunks):
-            gc = plan.chunk0[l] + ci
-            codes_g[:, gc, :codes[ci].shape[1]] = codes[ci]
-            bill = popc[ci] if zeros[ci] is None else popc[ci] + zeros[ci]
-            popc_g[:, gc, :st.p] = bill
         a_us.append(a_u)
-        skipped.append(sk)
-        r_bits_l.append(rb)
 
     if plan.b_max is not None and B != plan.b_max:
         raise ValueError(
@@ -1659,37 +1670,63 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
             f"launched with B={B} — run at capacity and express occupancy "
             f"through lane_mask")
     lane_mask = _lane_mask_arg(lane_mask, B)
-    if lane_mask is not None:
-        off = ~lane_mask
-        codes_g[off] = 0.0
-        popc_g[off] = 0
-        skipped = [sk * lane_mask for sk in skipped]
+    active_b = B if lane_mask is None else int(np.count_nonzero(lane_mask))
 
     for st in plan.stageds:
         for g in st.groups:
             g.bank.set_batch(B, lane_mask)
 
-    # Heterogeneous per-tile charges for the WHOLE program in two einsums:
-    # each slot's own clear/readout/aggregation statics + its own
-    # per-offset add templates times the popcount selection of its
-    # layer-chunk. Command ACCOUNTING is order-independent, so hoisting it
-    # out of the wave walk changes nothing the ledgers see; per-wave maxima
-    # fall out of one segmented reduction over the wave boundaries.
-    popc_s = popc_g[:, plan.gchunk, :]                    # (B, S, p_max)
+    codes_g = np.zeros((B, C_total, plan.n_pad), dtype=np.float32)
+    popc_g = np.zeros((B, C_total, plan.p_max), dtype=np.int64)
+    skipped: list = [None] * L
+    r_bits_l: list = [None] * L
+    encode_layer_ops = np.zeros(L, dtype=np.int64)
+    slot_layer = np.asarray([s.layer for s in plan.sched.slots],
+                            dtype=np.int64)
+    slot_wave = np.asarray([s.wave for s in plan.sched.slots],
+                           dtype=np.int64)
+    first_wave = np.full(L, len(plan.waves), dtype=np.int64)
+    np.minimum.at(first_wave, slot_layer, slot_wave)
+
+    # Data-INdependent charges for the whole program up front (broadcast
+    # statics, masked lanes zeroed); each layer's data-DEPENDENT add
+    # billing joins when the layer is encoded. Command ACCOUNTING is
+    # order-independent, so the ledgers see exactly what the up-front
+    # executor billed.
     counts_all = np.broadcast_to(plan.static,
                                  (B,) + plan.static.shape).copy()
-    counts_all[..., _RC_I] += np.einsum("bsk,sk->bs", popc_s, plan.add_rc)
-    m3 = np.einsum("bsk,sk->bs", popc_s, plan.add_m3)
-    counts_all[..., _M3_I] += m3
-    counts_all[..., _M5_I] += m3
     if lane_mask is not None:
-        # masked lanes execute nothing: zero their command rows so the
-        # executed wave maxima, ledger charges and retry serializations
-        # all price ONLY the occupied lanes
-        counts_all = counts_all * lane_mask[:, None, None]
-    wave_lo = np.asarray([wv.lo for wv in plan.waves], dtype=np.int64)
-    wave_max = np.maximum.reduceat(counts_all.sum(axis=0), wave_lo, axis=0)
+        counts_all *= lane_mask[:, None, None]
 
+    def _encode_layer(l: int) -> None:
+        """Host-side encode of layer l's (B, N_l) lane batch: fill its
+        global code/popcount rows and bill its slots' data-dependent add
+        templates (one einsum over just this layer's slots)."""
+        st = plan.stageds[l]
+        codes, popc, zeros, sk, rb = _chunk_arrays_batched(
+            a_us[l], st.n, st.n_sub, st.p, sparsity, templates_list[l])
+        for ci in range(st.n_chunks):
+            gc = plan.chunk0[l] + ci
+            codes_g[:, gc, :codes[ci].shape[1]] = codes[ci]
+            bill = popc[ci] if zeros[ci] is None else popc[ci] + zeros[ci]
+            popc_g[:, gc, :st.p] = bill
+        if lane_mask is not None:
+            off = ~lane_mask
+            codes_g[off, plan.chunk0[l]:plan.chunk0[l + 1]] = 0.0
+            popc_g[off, plan.chunk0[l]:plan.chunk0[l + 1]] = 0
+            sk = sk * lane_mask
+        skipped[l] = sk
+        r_bits_l[l] = rb
+        encode_layer_ops[l] = active_b * st.n * st.p
+        sl = np.nonzero(slot_layer == l)[0]
+        popc_s = popc_g[:, plan.gchunk[sl], :]            # (B, S_l, p_max)
+        counts_all[:, sl, _RC_I] += np.einsum("bsk,sk->bs", popc_s,
+                                              plan.add_rc[sl])
+        m3 = np.einsum("bsk,sk->bs", popc_s, plan.add_m3[sl])
+        counts_all[:, sl, _M3_I] += m3
+        counts_all[:, sl, _M5_I] += m3
+
+    wave_max = np.zeros((len(plan.waves), _F), dtype=np.int64)
     trace = FaultTrace() if fault is not None else None
     retry_wave_ops: list = []
     # the rows end up holding the bank's final time-shared occupant — the
@@ -1697,8 +1734,18 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
     last_lane = (-1 if lane_mask is None
                  else int(np.nonzero(lane_mask)[0][-1]))
     partials_flat = np.zeros((B, int(plan.out0[-1])), dtype=np.int64)
-    for wv in plan.waves:
+    next_enc = 0
+    for w, wv in enumerate(plan.waves):
+        # speculative encode deadline: every layer with a tile in this (or
+        # an earlier) wave must be encoded; the host encodes in layer
+        # order, so that's the prefix through the last such layer
+        need = np.nonzero(first_wave <= w)[0]
+        need_hi = int(need[-1]) + 1 if need.size else 0
+        while next_enc < need_hi:
+            _encode_layer(next_enc)
+            next_enc += 1
         lo, hi = wv.lo, wv.hi
+        wave_max[w] = counts_all[:, lo:hi].sum(axis=0).max(axis=0)
         codes_w = codes_g[:, plan.gchunk[lo:hi], :]       # (B, T, n_pad)
         # §V-D linearity collapse across the WHOLE fused wave: one matmul
         # advances every member tile, each against its own layer's resident
@@ -1727,11 +1774,19 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
                                    acc[last_lane, seg.lo:seg.hi],
                                    tiles=seg.pos)
 
+    # a layer with no scheduled tile never hit an encode deadline — encode
+    # it now so skipped/r_bits are complete (degenerate, defensive)
+    while next_enc < L:
+        _encode_layer(next_enc)
+        next_enc += 1
+
     rt_arrs, outs = [], []
+    counts_total = np.zeros(_F, dtype=np.int64)
     for l, (st, aq, wq) in enumerate(zip(plan.stageds, aqs, wqs)):
         rt = np.zeros((B, st.tiles, _F), dtype=np.int64)
         for g in st.groups:
             rt[:, g.tiles_idx] = g.bank.counts_matrix()
+        counts_total += rt.sum(axis=(0, 1))
         rt_arrs.append(rt)
         w_u = np.asarray(wq.values, dtype=np.uint32)
         n_sub, n_chunks, gs, grp = _partition_checks(st.n, wq, plan.geom)
@@ -1747,7 +1802,9 @@ def execute_program(plan: FusedProgram, aqs, wqs, templates_list=None,
         outs.append(out.astype(np.float32))
     return ProgramRunResult(outs=outs, rt_arrs=rt_arrs, skipped=skipped,
                             r_bits=r_bits_l, wave_max=wave_max,
-                            retry_wave_ops=retry_wave_ops, fault=trace)
+                            retry_wave_ops=retry_wave_ops, fault=trace,
+                            counts_total=counts_total,
+                            encode_layer_ops=encode_layer_ops)
 
 
 def _gemv_tile_on_slots(w_tile, a_tile, q, p, sparsity, geom,

@@ -28,7 +28,7 @@ import dataclasses
 import math
 from typing import Optional
 
-from .device import OpCounts
+from .device import OpCounts, _COUNT_FIELDS
 from .gemv import GemvCost, PudGeometry
 from .schedule import ProgramSchedule
 
@@ -101,6 +101,99 @@ class GpuBaseline:
 
 
 DDR4_2400 = DDR4Model()
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyModel:
+    """Per-COMMAND energy pricing for the executed PUD stack.
+
+    `DDR4Model.e_op` charges one flat Joule figure per PUD op — fine for the
+    analytic gemv-level formulas, but the executed path knows exactly which
+    commands ran: the `BankArray` ledger records RowCopy / MAJ3 / MAJ5 /
+    wider-MAJX counts per tile, and each of those is a different number of
+    timing-violated activations on the command bus (RowCopy is ACT·PRE·ACT =
+    2 activations + 1 precharge; a MAJX issues X activations before the
+    closing precharge — frac-ops in the multi-row activation sense of
+    SiDRAM/DRAM Bender). This model prices those primitives individually so
+    `price_program` can reconcile `e_total` EXACTLY against the executed
+    per-command ledger, including fault-retry re-bills and CXL page-in
+    traffic.
+
+    Calibration (DDR4): the A3 anchor mix for the 32000×4096 q=2/p=1 GeMV
+    is 410176 RowCopies + 36864 MAJ3 + 36864 MAJ5 = 483904 PUD ops issuing
+    1115264 activations (avg 2.3047 ACT/op). With `e_pre = 0.35·e_act`,
+    `e_act = 1.79e-9` reproduces `DDR4Model.e_op = 4.75e-9` J/op on that
+    mix to <0.1% (pinned by test), so gemv-level and per-command pricing
+    tell one story at the anchor.
+
+    The LPDDR5 point (`LPDDR5_CDPIM`) takes CD-PIM's geometry (PAPERS.md):
+    LPDDR5 rows are ~4× shorter than the 65k-cell DDR4 rows and run at
+    lower voltage, so activation energy drops ~3×; the narrower x16 channel
+    keeps per-bit I/O cheaper too.
+    """
+
+    name: str = "ddr4_2400"
+    e_act: float = 1.79e-9       # J per (timing-violated) row activation
+    e_pre: float = 0.6265e-9     # J per precharge closing an op sequence
+    e_bit_io: float = 15e-12     # J per DRAM<->host bit (readout / encode IO)
+    e_host_op: float = 0.1e-9    # J per host integer op during aggregation
+    idle_power: float = 0.5      # W controller active power during in-DRAM
+
+    # One PUD op = <activations>·e_act + one closing precharge.
+    @property
+    def e_row_copy(self) -> float:
+        return 2 * self.e_act + self.e_pre
+
+    @property
+    def e_maj3(self) -> float:
+        return 3 * self.e_act + self.e_pre
+
+    @property
+    def e_maj5(self) -> float:
+        return 5 * self.e_act + self.e_pre
+
+    @property
+    def e_majx_other(self) -> float:
+        return 7 * self.e_act + self.e_pre
+
+    def pud_energy(self, counts: OpCounts) -> float:
+        """Joules of the in-DRAM commands in an `OpCounts` ledger slice."""
+        return (counts.row_copy * self.e_row_copy
+                + counts.maj3 * self.e_maj3
+                + counts.maj5 * self.e_maj5
+                + counts.majx_other * self.e_majx_other)
+
+    def io_energy(self, bits: int) -> float:
+        """Joules of `bits` crossing the DRAM<->host data bus."""
+        return bits * self.e_bit_io
+
+    def host_energy(self, int_ops: int) -> float:
+        """Joules of `int_ops` host integer operations."""
+        return int_ops * self.e_host_op
+
+    def ledger_energy(self, counts: OpCounts) -> float:
+        """Full Joules of one ledger slice: PUD commands + its recorded
+        readout/write bits + its host integer ops. This is what a fault
+        retry re-bills — the wave segment re-runs end to end."""
+        return (self.pud_energy(counts)
+                + self.io_energy(counts.host_bits_read
+                                 + counts.host_bits_written)
+                + self.host_energy(counts.host_int_ops))
+
+    @classmethod
+    def zero(cls) -> "EnergyModel":
+        """An inert model: every per-command cost is zero, so every priced
+        `e_*` term is exactly 0.0 (the `FaultModel.none()` pattern —
+        provably no effect on timing, tested)."""
+        return cls(name="inert", e_act=0.0, e_pre=0.0, e_bit_io=0.0,
+                   e_host_op=0.0, idle_power=0.0)
+
+
+DDR4_ENERGY = EnergyModel()
+
+LPDDR5_CDPIM = EnergyModel(
+    name="lpddr5_cdpim", e_act=0.62e-9, e_pre=0.22e-9, e_bit_io=4e-12,
+    e_host_op=0.08e-9, idle_power=0.3)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -387,6 +480,25 @@ class ProgramCost:
     t_spill_restage: float = 0.0
     spill_restage_bits: int = 0
     spill_restages: int = 0
+    # Speculative encode overlap: `t_encode` is the FULL host-side encode
+    # time of the step (all layers); the pipelined timeline (layer k+1
+    # encodes under layer k's waves) exposes only `t_encode_extra` of it.
+    # A non-overlapped host would serialize all of `t_encode` in front of
+    # compute — `encode_overlap_speedup` is what the overlap buys.
+    t_encode: float = 0.0
+    # The isolated-launch baseline runs the SAME causal-speculative encode
+    # pipeline (launch l+1's encode under launch l's waves, `_encode_
+    # timeline` over the layer-major schedule) — this is its exposed
+    # stall, replacing the parts' own per-layer `max(0, e_l - c_l)`
+    # charges (which let a launch consume activations before they are
+    # encoded) in `t_sequential_total`, so `residency_speedup` compares
+    # one encode model against itself.
+    t_seq_encode_extra: float = 0.0
+    # Per-command energy split-outs (EnergyModel path): retry re-bills and
+    # CXL page-in bit traffic land as separate terms, the `t_retry` /
+    # `t_spill_restage` pattern. Zero under the legacy flat-e_op pricing.
+    e_retry: float = 0.0
+    e_spill: float = 0.0
 
     @property
     def t_total(self) -> float:
@@ -396,16 +508,27 @@ class ProgramCost:
 
     @property
     def e_total(self) -> float:
-        return self.e_pud + self.e_io + self.e_host
+        return (self.e_pud + self.e_io + self.e_host
+                + self.e_retry + self.e_spill)
 
     @property
     def t_sequential_total(self) -> float:
-        """One decode step as L isolated launches, each re-staging."""
-        return sum(c.t_total for c in self.sequential)
+        """One decode step as L isolated launches, each re-staging —
+        encode exposure priced by the same causal pipeline as `t_total`'s
+        (`t_seq_encode_extra`), not the parts' own intra-layer hiding."""
+        return (sum(c.t_total - c.t_encode_extra for c in self.sequential)
+                + self.t_seq_encode_extra)
 
     @property
     def residency_speedup(self) -> float:
         return self.t_sequential_total / self.t_total
+
+    @property
+    def encode_overlap_speedup(self) -> float:
+        """Step time with encode fully serialized ahead of compute, over
+        the pipelined step time (only the non-hidden remainder charged)."""
+        return (self.t_total + self.t_encode
+                - self.t_encode_extra) / self.t_total
 
     def asdict(self):
         d = dataclasses.asdict(self)
@@ -413,7 +536,34 @@ class ProgramCost:
         d["t_total"] = self.t_total
         d["t_sequential_total"] = self.t_sequential_total
         d["residency_speedup"] = self.residency_speedup
+        d["encode_overlap_speedup"] = self.encode_overlap_speedup
         return d
+
+
+def _encode_timeline(wave_times, first_wave, encode_times) -> float:
+    """End time of the speculative encode/wave pipeline.
+
+    One host core encodes layer activations in LAYER ORDER while earlier
+    layers' waves execute in the banks (the §V-E overlap, extended across
+    the fused program): wave `w` cannot start until every layer whose FIRST
+    scheduled wave is `w` has finished encoding. `encode_times[l]` is layer
+    l's host encode time; `first_wave[l]` its earliest wave;
+    `wave_times[w]` the bank time of fused wave `w`. Returns the finish
+    time of the last wave — at most `sum(encode_times)` later than the
+    un-stalled `sum(wave_times)`, so the exposed remainder never exceeds
+    what full up-front encoding would charge.
+    """
+    done, d = [], 0.0
+    for e in encode_times:
+        d += e
+        done.append(d)
+    ready: dict[int, float] = {}
+    for layer, w in enumerate(first_wave):
+        ready[w] = max(ready.get(w, 0.0), done[layer])
+    s = 0.0
+    for w, t in enumerate(wave_times):
+        s = max(s, ready.get(w, 0.0)) + t
+    return s
 
 
 def price_program(costs, sched: ProgramSchedule, batch: int = 1,
@@ -423,7 +573,11 @@ def price_program(costs, sched: ProgramSchedule, batch: int = 1,
                   retry_wave_ops=None,
                   spill_restage_bits: int = 0,
                   spill_restages: int = 0,
-                  spill: Optional[CxlModel] = None) -> ProgramCost:
+                  spill: Optional[CxlModel] = None,
+                  energy: Optional[EnergyModel] = None,
+                  executed_counts: Optional[OpCounts] = None,
+                  retry_counts: Optional[OpCounts] = None,
+                  executed_encode_ops=None) -> ProgramCost:
     """Price one decode step of a compiled program of resident GeMVs.
 
     costs: (L,) per-layer analytic `GemvCost` (single-pass, e.g.
@@ -458,6 +612,29 @@ def price_program(costs, sched: ProgramSchedule, batch: int = 1,
     (a `CxlModel`, required when the traffic is non-zero) into the
     separate `t_spill_restage` term, exactly the `t_retry` pattern —
     all-hot steps price unchanged.
+
+    Encoding is priced as a PIPELINE, not a lump: the host encodes layer
+    k+1's activations while layer k's waves execute (`_encode_timeline`),
+    so only the stall the timeline actually exposes past `t_compute`
+    lands in `t_encode_extra` — the executor runs the same just-in-time
+    per-layer encode order, making this term a measurement of the real
+    overlap rather than the old whole-step `max(0, t_encode - t_compute)`
+    bound (which it never exceeds). `executed_encode_ops` — (L,) per-layer
+    host encode ops the run actually performed (active lanes only;
+    `engine.ProgramReport.encode_ops`) — replaces the analytic
+    `batch × encode_host_ops` estimate in both `t_encode` and the
+    timeline.
+
+    `energy` switches the `e_*` terms from the flat `DDR4Model.e_op`
+    estimate to per-command pricing: with `executed_counts` (the run's
+    complete `OpCounts` ledger, retries included) and `retry_counts` (the
+    slice fault retries re-billed), `e_pud`/`e_io`/`e_host` price the
+    fault-free base ledger, `e_retry` prices the retry slice end to end
+    (`EnergyModel.ledger_energy`), and `e_spill` prices CXL page-in bit
+    traffic — summing EXACTLY to the energy of everything the banks
+    recorded (reconciled bit-for-bit by test and bench). Without executed
+    counts the same per-command weights price the analytic per-layer
+    ledgers. `energy=None` keeps the legacy flat pricing unchanged.
     """
     costs = list(costs)
     if len(costs) != sched.layers:
@@ -468,9 +645,11 @@ def price_program(costs, sched: ProgramSchedule, batch: int = 1,
     ops = [c.ops_per_tile.pud_ops for c in costs]
     wave_ops: dict[int, int] = {}
     chan_ops = [0] * geom.channels
+    first_wave = [sched.waves] * len(costs)
     for s in sched.slots:
         wave_ops[s.wave] = max(wave_ops.get(s.wave, 0), ops[s.layer])
         chan_ops[s.channel] += ops[s.layer]
+        first_wave[s.layer] = min(first_wave[s.layer], s.wave)
     if executed_wave_ops is not None:
         executed_wave_ops = list(executed_wave_ops)
         if len(executed_wave_ops) != sched.waves:
@@ -478,22 +657,75 @@ def price_program(costs, sched: ProgramSchedule, batch: int = 1,
                 f"execution ran {len(executed_wave_ops)} fused waves for a "
                 f"{sched.waves}-wave schedule — the executed program does "
                 f"not match the schedule being priced")
+        wave_times = [float(w) * model.t_op for w in executed_wave_ops]
         t_bank = float(sum(executed_wave_ops)) * model.t_op
     else:
+        wave_times = [batch * wave_ops.get(w, 0) * model.t_op
+                      for w in range(sched.waves)]
         t_bank = batch * sum(wave_ops.values()) * model.t_op
     t_bus = batch * max(chan_ops) * model.t_cmd if sched.slots else 0.0
     t_compute = max(t_bank, t_bus)
     t_aggregate = batch * sum(c.aggregate_bits for c in costs) / 8 \
         / model.agg_bw
-    t_encode = batch * sum(c.encode_host_ops for c in costs) \
-        / model.host_encode_rate
-    t_encode_extra = max(0.0, t_encode - t_compute)
+    if executed_encode_ops is not None:
+        executed_encode_ops = list(executed_encode_ops)
+        if len(executed_encode_ops) != len(costs):
+            raise ValueError(
+                f"{len(executed_encode_ops)} per-layer encode op counts "
+                f"for a {len(costs)}-layer program")
+        encode_times = [float(e) / model.host_encode_rate
+                        for e in executed_encode_ops]
+    else:
+        encode_times = [batch * c.encode_host_ops / model.host_encode_rate
+                        for c in costs]
+    t_encode = sum(encode_times)
+    timeline = _encode_timeline(wave_times, first_wave, encode_times)
+    t_encode_extra = max(0.0, timeline - t_compute)
+    # the isolated-launch baseline under the SAME causal-speculative
+    # pipeline: launch l is one big "wave" and launch l+1's encode runs
+    # under it — its exposed stall replaces the parts' per-layer encode
+    # charges inside `t_sequential_total`
+    seq = tuple(price_gemv_batched(c, batch, geom, model) for c in costs)
+    seq_waves = [c.t_compute for c in seq]
+    seq_timeline = _encode_timeline(seq_waves, list(range(len(seq))),
+                                    encode_times)
+    t_seq_encode_extra = max(0.0, seq_timeline - sum(seq_waves))
 
-    e_pud = batch * sum(c.runtime.pud_ops for c in costs) * model.e_op
-    e_io = batch * sum(c.runtime.host_bits_read + c.runtime.host_bits_written
-                       for c in costs) * model.e_bit_io
-    e_host = (batch * sum(c.runtime.host_int_ops for c in costs)
-              * model.e_host_op + model.idle_power * t_compute)
+    if energy is None:
+        e_pud = batch * sum(c.runtime.pud_ops for c in costs) * model.e_op
+        e_io = batch * sum(c.runtime.host_bits_read
+                           + c.runtime.host_bits_written
+                           for c in costs) * model.e_bit_io
+        e_host = (batch * sum(c.runtime.host_int_ops for c in costs)
+                  * model.e_host_op + model.idle_power * t_compute)
+        e_retry = 0.0
+        e_spill = 0.0
+    elif executed_counts is not None:
+        retry_c = retry_counts if retry_counts is not None else OpCounts()
+        base_c = OpCounts(*(getattr(executed_counts, f) - getattr(retry_c, f)
+                            for f in _COUNT_FIELDS))
+        for f in _COUNT_FIELDS:
+            if getattr(base_c, f) < 0:
+                raise ValueError(
+                    f"retry ledger exceeds the executed total on {f}: "
+                    f"{getattr(retry_c, f)} > {getattr(executed_counts, f)}")
+        e_pud = energy.pud_energy(base_c)
+        e_io = energy.io_energy(base_c.host_bits_read
+                                + base_c.host_bits_written)
+        e_host = (energy.host_energy(base_c.host_int_ops)
+                  + energy.idle_power * t_compute)
+        e_retry = energy.ledger_energy(retry_c)
+        e_spill = energy.io_energy(spill_restage_bits)
+    else:
+        e_pud = batch * sum(energy.pud_energy(c.runtime) for c in costs)
+        e_io = energy.io_energy(
+            batch * sum(c.runtime.host_bits_read + c.runtime.host_bits_written
+                        for c in costs))
+        e_host = (energy.host_energy(
+            batch * sum(c.runtime.host_int_ops for c in costs))
+            + energy.idle_power * t_compute)
+        e_retry = 0.0
+        e_spill = energy.io_energy(spill_restage_bits)
     retry_wave_ops = list(retry_wave_ops) if retry_wave_ops else []
     t_retry = float(sum(retry_wave_ops)) * model.t_op
     if spill_restage_bits or spill_restages:
@@ -513,11 +745,12 @@ def price_program(costs, sched: ProgramSchedule, batch: int = 1,
         staged_bits=sum(c.weight_load_bits for c in costs),
         waves=sched.waves, waves_shared=sched.waves_shared,
         e_pud=e_pud, e_io=e_io, e_host=e_host,
-        sequential=tuple(price_gemv_batched(c, batch, geom, model)
-                         for c in costs),
+        sequential=seq,
         t_retry=t_retry, retry_waves=len(retry_wave_ops),
         t_spill_restage=t_spill, spill_restage_bits=spill_restage_bits,
-        spill_restages=spill_restages)
+        spill_restages=spill_restages,
+        t_encode=t_encode, t_seq_encode_extra=t_seq_encode_extra,
+        e_retry=e_retry, e_spill=e_spill)
 
 
 # ---------------------------------------------------------------------------
@@ -555,6 +788,9 @@ class FabricCost:
     e_pud: float
     e_io: float
     e_host: float
+    t_encode: float = 0.0
+    e_retry: float = 0.0
+    e_spill: float = 0.0
 
     @property
     def layers(self) -> int:
@@ -567,7 +803,8 @@ class FabricCost:
 
     @property
     def e_total(self) -> float:
-        return self.e_pud + self.e_io + self.e_host
+        return (self.e_pud + self.e_io + self.e_host
+                + self.e_retry + self.e_spill)
 
     @property
     def t_serial_compute(self) -> float:
@@ -596,6 +833,13 @@ class FabricCost:
     def residency_speedup(self) -> float:
         return self.t_sequential_total / self.t_total
 
+    @property
+    def encode_overlap_speedup(self) -> float:
+        """Fabric step with every part's encode serialized up front, over
+        the pipelined step (same definition as `ProgramCost`)."""
+        return (self.t_total + self.t_encode
+                - self.t_encode_extra) / self.t_total
+
     def asdict(self):
         d = dataclasses.asdict(self)
         d["parts"] = [c.asdict() for c in self.parts]
@@ -606,6 +850,7 @@ class FabricCost:
         d["scaleout_speedup"] = self.scaleout_speedup
         d["t_sequential_total"] = self.t_sequential_total
         d["residency_speedup"] = self.residency_speedup
+        d["encode_overlap_speedup"] = self.encode_overlap_speedup
         return d
 
 
@@ -655,7 +900,10 @@ def combine_fabric_costs(parts, part_dimms, dimms: int,
         waves_shared=sum(c.waves_shared for c in parts),
         e_pud=sum(c.e_pud for c in parts),
         e_io=sum(c.e_io for c in parts),
-        e_host=sum(c.e_host for c in parts))
+        e_host=sum(c.e_host for c in parts),
+        t_encode=sum(c.t_encode for c in parts),
+        e_retry=sum(c.e_retry for c in parts),
+        e_spill=sum(c.e_spill for c in parts))
 
 
 # ---------------------------------------------------------------------------

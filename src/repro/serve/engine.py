@@ -273,8 +273,18 @@ class ServeEngine:
         if key not in self._tick_price_cache:
             cost = self.decode_program.price(bit_density=bit_density,
                                              batch=occupancy)
-            self._tick_price_cache[key] = cost.t_total
-        return self._tick_price_cache[key]
+            self._tick_price_cache[key] = (cost.t_total, cost.e_total)
+        return self._tick_price_cache[key][0]
+
+    def decode_tick_energy_j(self, occupancy: int,
+                             bit_density: float = 0.5) -> Optional[float]:
+        """Priced Joules of ONE decode tick at the given lane occupancy —
+        the per-command `EnergyModel` twin of `decode_tick_cost_s`,
+        sharing its cache (one pricing fills both). None for unquantized
+        engines."""
+        if self.decode_tick_cost_s(occupancy, bit_density) is None:
+            return None
+        return self._tick_price_cache[(occupancy, bit_density)][1]
 
     def residency_stats(self) -> Optional[dict]:
         """The engine's pool/fault counters plus the serving-level fallback

@@ -7,8 +7,9 @@ import pytest
 
 from benchmarks.check_regression import (check_drop, check_errors,
                                          check_required, load_doc, main,
-                                         merge_best, read_manifest,
-                                         rows_by_name)
+                                         merge_best, read_directions,
+                                         read_manifest, row_direction,
+                                         rows_by_name, step_summary_table)
 
 
 def _doc(rows, errors=()):
@@ -92,6 +93,122 @@ def test_required_rows_and_manifest(tmp_path):
         _doc({"sim.wave_speedup_x": 0.0, "sim.fused_wave_speedup_x": 2.0})),
         names)
     assert len(bad) == 1 and "non-positive" in bad[0]
+
+
+DIRS = {"sim.energy_step_ddr4_j": "down", "sim.energy_ratio_vs_cpu": "up"}
+EBASE = _doc({"sim.energy_step_ddr4_j": 0.10,
+              "sim.energy_ratio_vs_cpu": 10.0,
+              "sim.wave_speedup_x": 8.0})
+
+
+def test_row_direction_resolution():
+    # explicit manifest column wins; ratio suffixes default up; the rest
+    # stay ungated (nightly presence only)
+    assert row_direction("sim.energy_step_ddr4_j", DIRS) == "down"
+    assert row_direction("sim.energy_ratio_vs_cpu", DIRS) == "up"
+    assert row_direction("sim.wave_speedup_x", DIRS) == "up"
+    assert row_direction("sim.wave_banked_ms", DIRS) is None
+    assert row_direction("sim.energy_ratio_vs_cpu") is None  # no manifest
+
+
+def test_down_gate_fails_on_rise_passes_on_fall():
+    # a cost row REGRESSES by rising: +30% over the ceiling fails...
+    rise = _doc({"sim.energy_step_ddr4_j": 0.13,
+                 "sim.energy_ratio_vs_cpu": 10.0,
+                 "sim.wave_speedup_x": 8.0})
+    failures = check_drop(merge_best([rise], DIRS), EBASE, 0.25, DIRS)
+    assert len(failures) == 1
+    assert "sim.energy_step_ddr4_j" in failures[0]
+    assert "rose" in failures[0] and "ceiling" in failures[0]
+    # ...while falling far below the baseline is an improvement, not a
+    # regression — and an up-gated row still fails on a drop
+    fall = _doc({"sim.energy_step_ddr4_j": 0.01,
+                 "sim.energy_ratio_vs_cpu": 7.0,   # −30% on an up row
+                 "sim.wave_speedup_x": 8.0})
+    failures = check_drop(merge_best([fall], DIRS), EBASE, 0.25, DIRS)
+    assert len(failures) == 1
+    assert "sim.energy_ratio_vs_cpu" in failures[0]
+    assert "dropped" in failures[0]
+
+
+def test_merge_best_keeps_min_for_down_rows():
+    """Contention inflates a cost row, so the least-polluted measurement
+    of a `down` row is the MIN across runs (MAX stays for up rows)."""
+    noisy = _doc({"sim.energy_step_ddr4_j": 0.14, "sim.wave_speedup_x": 5.0,
+                  "sim.energy_ratio_vs_cpu": 9.0})
+    clean = _doc({"sim.energy_step_ddr4_j": 0.09, "sim.wave_speedup_x": 8.1,
+                  "sim.energy_ratio_vs_cpu": 10.5})
+    merged = merge_best([noisy, clean], DIRS)
+    assert merged["sim.energy_step_ddr4_j"] == 0.09
+    assert merged["sim.wave_speedup_x"] == 8.1
+    assert check_drop(merged, EBASE, 0.25, DIRS) == []
+
+
+def test_read_directions_and_manifest_back_compat(tmp_path):
+    manifest = tmp_path / "rows.txt"
+    manifest.write_text(
+        "# comment\n"
+        "sim.wave_speedup_x              # suffix-gated, no column\n"
+        "sim.energy_step_ddr4_j   down   # explicit cost row\n"
+        "sim.energy_ratio_vs_cpu  up\n")
+    assert read_directions(str(manifest)) == {
+        "sim.energy_step_ddr4_j": "down", "sim.energy_ratio_vs_cpu": "up"}
+    # read_manifest keeps returning bare names — the direction column
+    # must not corrupt the nightly require-rows check
+    assert read_manifest(str(manifest)) == [
+        "sim.wave_speedup_x", "sim.energy_step_ddr4_j",
+        "sim.energy_ratio_vs_cpu"]
+    bad = tmp_path / "bad.txt"
+    bad.write_text("sim.energy_step_ddr4_j sideways\n")
+    with pytest.raises(ValueError, match="up|down"):
+        read_directions(str(bad))
+
+
+def test_committed_manifest_directions_parse():
+    """The committed manifest's direction column must stay well-formed and
+    keep the PR-10 energy rows gated the right way round."""
+    dirs = read_directions("benchmarks/bench_rows.txt")
+    assert dirs["sim.energy_step_ddr4_j"] == "down"
+    assert dirs["sim.energy_step_lpddr5_j"] == "down"
+    assert dirs["sim.energy_ratio_vs_cpu"] == "up"
+
+
+def test_step_summary_table(tmp_path):
+    new = {"sim.energy_step_ddr4_j": 0.14,     # above the 0.125 ceiling
+           "sim.energy_ratio_vs_cpu": 11.0,
+           "sim.wave_speedup_x": 8.0,
+           "sim.new_speedup_x": 2.0}           # not in baseline
+    table = step_summary_table(new, EBASE, 0.25, DIRS,
+                               run_labels=("a.json", "b.json"))
+    assert "| `sim.energy_step_ddr4_j` | down | 0.1 | 0.14 |" in table
+    assert "❌ fail" in table and "✅ ok" in table
+    assert "`sim.new_speedup_x`" in table     # surfaced as newly gated
+    assert "a.json" in table
+    # missing gated row renders as a failure, not a crash
+    table2 = step_summary_table({}, EBASE, 0.25, DIRS)
+    assert "❌ missing" in table2
+
+
+def test_main_with_directions_and_summary(tmp_path):
+    base_p = tmp_path / "base.json"
+    man_p = tmp_path / "rows.txt"
+    summ_p = tmp_path / "summary.md"
+    base_p.write_text(json.dumps(EBASE))
+    man_p.write_text("sim.energy_step_ddr4_j   down\n"
+                     "sim.energy_ratio_vs_cpu  up\n")
+    rise_p = tmp_path / "rise.json"
+    rise_p.write_text(json.dumps(_doc(
+        {"sim.energy_step_ddr4_j": 0.14, "sim.energy_ratio_vs_cpu": 10.0,
+         "sim.wave_speedup_x": 8.0})))
+    assert main([str(rise_p), "--baseline", str(base_p),
+                 "--directions", str(man_p),
+                 "--step-summary", str(summ_p)]) == 1
+    assert "❌ fail" in summ_p.read_text()
+    # without the direction manifest the energy row is ungated → passes
+    assert main([str(rise_p), "--baseline", str(base_p)]) == 0
+    # --step-summary without --baseline is a usage error
+    with pytest.raises(SystemExit):
+        main([str(rise_p), "--step-summary", str(summ_p)])
 
 
 def test_committed_manifest_matches_bench_suite():

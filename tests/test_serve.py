@@ -247,3 +247,23 @@ def test_resident_serving_reports_no_fallback():
     assert stats["fault_corrupted"] == 0      # no fault model configured
     assert stats["degraded_layers"] == []
     assert ServeEngine(cfg, params, max_seq=32).residency_stats() is None
+
+
+def test_decode_tick_energy_twin_of_tick_cost():
+    """`decode_tick_energy_j` is the EnergyModel twin of
+    `decode_tick_cost_s`: one pricing fills both cache slots, the Joules
+    match a direct program pricing exactly, and dense engines get None."""
+    cfg = dataclasses.replace(tiny_config("llama2-7b"), dtype="float32",
+                              weight_bits=8)
+    params = init_params(param_defs(cfg), KEY)
+    eng = ServeEngine(cfg, params, max_seq=32, quantized=True)
+    e1 = eng.decode_tick_energy_j(1)
+    assert e1 is not None and e1 > 0.0
+    # shares the seconds cache: the (occupancy, density) entry holds both
+    key = (1, 0.5)
+    assert eng._tick_price_cache[key] == (eng.decode_tick_cost_s(1), e1)
+    cost = eng.decode_program.price(bit_density=0.5, batch=1)
+    assert e1 == cost.e_total
+    # more lanes bill more readout/host energy at the same resident waves
+    assert eng.decode_tick_energy_j(2) > e1
+    assert ServeEngine(cfg, params, max_seq=32).decode_tick_energy_j(1) is None
